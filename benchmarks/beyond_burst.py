@@ -1,0 +1,61 @@
+"""Beyond-paper §Perf (PDES iteration 3): burst emission.
+
+One EMIT event emits up to 8 photons per wave instead of chaining one at a
+time — the wave count per epoch (which sets the vectorized engine's
+compute term: each wave is a full O(capacity) vector pass) collapses, with
+bit-identical results.
+"""
+import sys
+from pathlib import Path
+
+import numpy as np
+
+sys.path.insert(0, str(Path(__file__).parent))
+from pdes_common import _cfg, AS_KW, engine_breakdown  # noqa
+
+from repro.core import Simulator, as_network, make_partition  # noqa
+
+
+def rows():
+    import dataclasses
+    out = []
+    net = as_network(**AS_KW)
+    for S in (8, 32):
+        part = make_partition(net, S, scheme="sa")
+        r0 = Simulator(net, part, _cfg(S)).run(chunk=16)
+        r1 = Simulator(net, part,
+                       dataclasses.replace(_cfg(S), burst_emit=True)
+                       ).run(chunk=16)
+        assert r0.fingerprint() == r1.fingerprint(), "burst diverged!"
+        w0 = int(np.asarray(r0.metrics.n_waves).sum())
+        w1 = int(np.asarray(r1.metrics.n_waves).sum())
+        d0 = dict(S=S, mode="gathered",
+                  events_by_kind=np.asarray(r0.metrics.events_by_kind),
+                  n_waves=np.asarray(r0.metrics.n_waves),
+                  outbox_sent=np.asarray(r0.metrics.outbox_sent),
+                  qsm_requests=np.asarray(r0.metrics.qsm_requests))
+        d1 = dict(d0, events_by_kind=np.asarray(r1.metrics.events_by_kind),
+                  n_waves=np.asarray(r1.metrics.n_waves),
+                  outbox_sent=np.asarray(r1.metrics.outbox_sent),
+                  qsm_requests=np.asarray(r1.metrics.qsm_requests))
+        t0 = engine_breakdown(d0).total_wall
+        t1 = engine_breakdown(d1).total_wall
+        out.append(dict(S=S, waves_base=w0, waves_burst=w1,
+                        wave_reduction=w0 / max(w1, 1),
+                        engine_total_base_s=t0, engine_total_burst_s=t1,
+                        speedup=t0 / t1))
+    return out
+
+
+def main():
+    print("# beyond_burst: burst emission (bit-identical; engine model)")
+    print("S,waves_base,waves_burst,wave_reduction,"
+          "engine_total_base_s,engine_total_burst_s,speedup")
+    for r in rows():
+        print(f"{r['S']},{r['waves_base']},{r['waves_burst']},"
+              f"{r['wave_reduction']:.2f},{r['engine_total_base_s']:.5f},"
+              f"{r['engine_total_burst_s']:.5f},{r['speedup']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

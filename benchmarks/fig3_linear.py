@@ -1,0 +1,49 @@
+"""Fig 3 reproduction: linear-topology strong scaling, 1-128 processes.
+
+Paper methodology: average per-process time split into compute / socket
+(global QSM) / MPI — where "MPI" lumps straggler wait together with
+communication (the lumping Fig 5 later unpicks).
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).parent))
+from pdes_common import engine_breakdown, paper_breakdown, run_sim  # noqa
+
+SCALES = [1, 2, 4, 8, 16, 32, 64, 128]
+
+
+def rows():
+    out = []
+    base_total = None
+    for S in SCALES:
+        d = run_sim("linear", S)
+        bd = paper_breakdown(d)
+        av = bd.averages()
+        mpi = av["wait"] + av["comm"]          # the paper's original lumping
+        total = bd.total_wall
+        if base_total is None:
+            base_total = total
+        ebd = engine_breakdown(d)
+        out.append(dict(
+            S=S, compute_s=av["compute"], socket_s=av["qsm"], mpi_s=mpi,
+            total_s=total, speedup=base_total / total,
+            engine_total_s=ebd.total_wall,
+            events=int(d["events_by_kind"].sum()),
+            epochs=d["n_epochs"]))
+    return out
+
+
+def main():
+    print("# fig3_linear: projected SeQUeNCe-like (FRONTIER+SEQUENCE_PY); "
+          "engine_total = this engine (TPU_POD+vector model)")
+    print("S,compute_s,socket_s,mpi_s,total_s,speedup,engine_total_s,"
+          "events,epochs")
+    for r in rows():
+        print(f"{r['S']},{r['compute_s']:.4f},{r['socket_s']:.4f},"
+              f"{r['mpi_s']:.4f},{r['total_s']:.4f},{r['speedup']:.2f},"
+              f"{r['engine_total_s']:.5f},{r['events']},{r['epochs']}")
+
+
+if __name__ == "__main__":
+    main()

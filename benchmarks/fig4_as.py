@@ -1,0 +1,46 @@
+"""Fig 4 reproduction: autonomous-system topology strong scaling, 1-512.
+
+The paper's finding: maximum performance at a mere 16 processes, after
+which synchronisation costs outweigh the decreased compute share.
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).parent))
+from pdes_common import engine_breakdown, paper_breakdown, run_sim  # noqa
+
+SCALES = [1, 2, 4, 8, 16, 32, 64, 128, 256]  # S=512: single-core host budget, see EXPERIMENTS.md
+
+
+def rows():
+    out = []
+    base = None
+    for S in SCALES:
+        d = run_sim("as", S)
+        bd = paper_breakdown(d)
+        av = bd.averages()
+        total = bd.total_wall
+        if base is None:
+            base = total
+        ev = d["events_by_kind"].sum(-1)
+        imb = float(ev.sum(1).max() / max(ev.sum(1).mean(), 1e-9))
+        out.append(dict(
+            S=S, compute_s=av["compute"], socket_s=av["qsm"],
+            mpi_s=av["wait"] + av["comm"], total_s=total,
+            speedup=base / total, event_imbalance=imb,
+            engine_total_s=engine_breakdown(d).total_wall))
+    return out
+
+
+def main():
+    print("# fig4_as: projected SeQUeNCe-like; peak-then-degrade expected")
+    print("S,compute_s,socket_s,mpi_s,total_s,speedup,event_imbalance,"
+          "engine_total_s")
+    for r in rows():
+        print(f"{r['S']},{r['compute_s']:.4f},{r['socket_s']:.4f},"
+              f"{r['mpi_s']:.4f},{r['total_s']:.4f},{r['speedup']:.2f},"
+              f"{r['event_imbalance']:.2f},{r['engine_total_s']:.5f}")
+
+
+if __name__ == "__main__":
+    main()

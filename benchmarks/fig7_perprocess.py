@@ -1,0 +1,41 @@
+"""Fig 7 reproduction: per-process compute time per epoch (8 processes,
+epochs bucketed) — "one process dominating the rest by a wide margin"."""
+import sys
+from pathlib import Path
+
+import numpy as np
+
+sys.path.insert(0, str(Path(__file__).parent))
+from pdes_common import paper_breakdown, run_sim  # noqa
+
+BUCKET = 4
+
+
+def rows(S=8):
+    d = run_sim("as", S)
+    bd = paper_breakdown(d)
+    comp = bd.compute  # (S, E)
+    E = comp.shape[1]
+    nb = E // BUCKET
+    out = []
+    for b in range(nb):
+        seg = comp[:, b * BUCKET:(b + 1) * BUCKET].sum(axis=1)
+        out.append([b] + seg.tolist())
+    return out, comp
+
+
+def main():
+    data, comp = rows()
+    S = comp.shape[0]
+    print(f"# fig7_perprocess: AS, {S} processes, compute time per "
+          f"{BUCKET}-epoch bucket (s)")
+    print("bucket," + ",".join(f"p{i}" for i in range(S)))
+    for row in data:
+        print(f"{row[0]}," + ",".join(f"{v:.4f}" for v in row[1:]))
+    tot = comp.sum(axis=1)
+    print(f"# per-process totals: {np.round(tot, 3).tolist()}")
+    print(f"# dominance max/median: {tot.max() / np.median(tot):.2f}")
+
+
+if __name__ == "__main__":
+    main()

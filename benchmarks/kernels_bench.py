@@ -1,0 +1,87 @@
+"""Kernel microbenchmarks (CPU wall time; the Pallas kernels additionally
+run in interpret mode for a correctness-throughput sanity number)."""
+import sys
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+sys.path.insert(0, str(Path(__file__).parent))
+
+
+def _bench(fn, *args, iters=20):
+    fn(*args)  # compile
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def rows():
+    out = []
+    # qchannel: 64k photons
+    from repro.kernels.qchannel.ref import qchannel_ref
+    n = 1 << 16
+    uid = jnp.arange(n, dtype=jnp.uint32)
+    loss = jnp.full((n,), 0.2, jnp.float32)
+    bit = (uid & 1).astype(jnp.int32)
+    basis = ((uid >> 1) & 1).astype(jnp.int32)
+    us = _bench(qchannel_ref, uid, loss, bit, basis)
+    out.append(("qchannel_ref_64k", us, f"{n / us:.0f}Mphotons/s".replace(
+        "M", "" if us > 1e6 else "M")))
+
+    # event_select: 8k pool
+    from repro.kernels.event_select.ref import event_select_ref
+    cap = 8192
+    t = jax.random.randint(jax.random.key(0), (cap,), 0, 10_000, jnp.int32)
+    v = jax.random.bernoulli(jax.random.key(1), 0.7, (cap,))
+    us = _bench(event_select_ref, t, v, jnp.int32(5000))
+    out.append(("event_select_ref_8k", us, f"{cap / us:.1f}events/us"))
+
+    # flash-equivalent chunked attention vs dense oracle, T=2048
+    from repro.kernels.flash_attention.ref import attention_ref
+    from repro.models.chunked_attention import chunked_attention
+    import functools
+    B, H, T, D = 1, 8, 2048, 64
+    ks = jax.random.split(jax.random.key(2), 3)
+    q = jax.random.normal(ks[0], (B, H, T, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, H, T, D), jnp.float32)
+    v3 = jax.random.normal(ks[2], (B, H, T, D), jnp.float32)
+    dense = jax.jit(functools.partial(attention_ref, sm_scale=D ** -0.5,
+                                      causal=True))
+    chunked = jax.jit(functools.partial(chunked_attention, causal=True,
+                                        sm_scale=D ** -0.5, chunk=512))
+    us_d = _bench(dense, q, k, v3, iters=5)
+    us_c = _bench(chunked, q, k, v3, iters=5)
+    out.append(("attention_dense_2k", us_d, "oracle"))
+    out.append(("attention_chunked_2k", us_c,
+                f"{us_d / us_c:.2f}x_vs_dense"))
+
+    # PDES engine throughput (measured on this host)
+    from repro.core import EngineConfig, Simulator, linear_network, \
+        make_partition
+    net = linear_network(n_routers=64, n_photons=64, period_ns=4000)
+    cfg = EngineConfig(n_shards=1, pool_cap=16_384, qsm_cap=512,
+                       outbox_cap=512, route_cap=64)
+    sim = Simulator(net, make_partition(net, 1), cfg)
+    t0 = time.perf_counter()
+    res = sim.run(max_epochs=512, chunk=64)
+    wall = time.perf_counter() - t0
+    ev = int(res.metrics.events_by_kind.sum())
+    out.append(("pdes_events_per_s_cpu", wall / max(ev, 1) * 1e6,
+                f"{ev / wall:.0f}events/s"))
+    return out
+
+
+def main():
+    print("# kernels_bench (CPU host measurements)")
+    print("name,us_per_call,derived")
+    for name, us, derived in rows():
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+"""§Perf hillclimbing driver: lower a cell with config overrides, extract
+roofline terms, and append the hypothesis→change→before→after record.
+
+    PYTHONPATH=src python benchmarks/perf_hillclimb.py \
+        --arch moonshot-v1-16b-a3b --shape train_4k \
+        --set moe_dp_slices=16 --tag sliced_dispatch
+"""
+import os
+
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+from pathlib import Path  # noqa: E402
+
+PERF_DIR = Path(__file__).resolve().parent.parent / "experiments" / "perf"
+
+
+def parse_override(s: str):
+    k, v = s.split("=", 1)
+    for cast in (int, float):
+        try:
+            return k, cast(v)
+        except ValueError:
+            continue
+    if v in ("True", "False"):
+        return k, v == "True"
+    return k, v
+
+
+def run(arch, shape_name, overrides, tag, mesh_kind="single"):
+    from repro.configs import registry as R
+    from repro.launch import roofline as RL
+    from repro.launch.dryrun import _depth_scaled, lower_cell
+    from repro.launch.mesh import make_production_mesh
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    cfg = R.get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **dict(overrides))
+    shape = R.SHAPES[shape_name]
+    total, active = RL.count_params(cfg)
+    mf = RL.model_flops_for(cfg, shape, total, active)
+
+    t0 = time.time()
+    terms12 = []
+    for r in (1, 2):
+        _, comp = lower_cell(_depth_scaled(cfg, r), shape, mesh)
+        terms12.append(RL.analyze(comp.cost_analysis(), comp.as_text(),
+                                  mesh.devices.size, mf))
+    terms = RL.extrapolate(terms12[0], terms12[1], cfg.pattern_repeats)
+    rec = dict(arch=arch, shape=shape_name, tag=tag,
+               overrides=dict(overrides), mesh=mesh_kind,
+               roofline=terms.as_dict(),
+               elapsed_s=round(time.time() - t0, 1))
+    PERF_DIR.mkdir(parents=True, exist_ok=True)
+    out = PERF_DIR / f"{arch}__{shape_name}__{tag}.json"
+    out.write_text(json.dumps(rec, indent=1))
+    r = rec["roofline"]
+    print(f"[perf] {arch} x {shape_name} [{tag}] "
+          f"compute={r['compute_s']:.3e}s memory={r['memory_s']:.3e}s "
+          f"coll={r['collective_s']:.3e}s dominant={r['dominant']} "
+          f"({rec['elapsed_s']}s)")
+    print(f"       coll_by_kind: "
+          f"{ {k: f'{v/1e9:.1f}GB' for k, v in r['coll_by_kind'].items()} }")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--set", action="append", default=[],
+                    help="cfg override key=value (repeatable)")
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--mesh", default="single")
+    args = ap.parse_args()
+    overrides = [parse_override(s) for s in args.set]
+    run(args.arch, args.shape, overrides, args.tag, args.mesh)
+
+
+if __name__ == "__main__":
+    main()

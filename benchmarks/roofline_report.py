@@ -1,0 +1,40 @@
+"""Roofline report: assemble the §Roofline table from dry-run JSONs."""
+import json
+import sys
+from pathlib import Path
+
+DRYRUN = Path(__file__).resolve().parent.parent / "experiments" / "dryrun"
+
+
+def load(mesh_filter="single_pod_16x16"):
+    rows = []
+    for p in sorted(DRYRUN.glob("*.json")):
+        d = json.loads(p.read_text())
+        if d.get("mesh") != mesh_filter:
+            continue
+        rows.append(d)
+    return rows
+
+
+def main():
+    rows = load()
+    print("# roofline: per (arch x shape), single-pod 16x16, v5e terms (s)")
+    print("arch,shape,status,compute_s,memory_s,collective_s,dominant,"
+          "useful_flops_ratio,args_bytes_per_dev")
+    for d in rows:
+        if d["status"] != "ok":
+            print(f"{d['arch']},{d['shape']},{d['status']},,,,,,")
+            continue
+        r = d["roofline"]
+        ratio = (d["model_flops"] /
+                 (r["flops_per_dev"] * d["n_devices"])
+                 if r["flops_per_dev"] else 0.0)
+        mem = d.get("memory_analysis") or {}
+        print(f"{d['arch']},{d['shape']},ok,{r['compute_s']:.3e},"
+              f"{r['memory_s']:.3e},{r['collective_s']:.3e},"
+              f"{r['dominant']},{ratio:.2f},"
+              f"{mem.get('argument_size_in_bytes', '')}")
+
+
+if __name__ == "__main__":
+    main()

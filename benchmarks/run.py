@@ -1,0 +1,63 @@
+"""Benchmark entrypoint: one section per paper figure/table + beyond-paper
+comparisons + kernel microbenches + the roofline report.
+
+``PYTHONPATH=src python -m benchmarks.run [--only SECTION]``
+"""
+import argparse
+import sys
+import time
+import traceback
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).parent))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="run a single section by name")
+    args = ap.parse_args()
+
+    import fig3_linear
+    import fig4_as
+    import fig5_breakdown
+    import fig6_redefined
+    import fig7_perprocess
+    import beyond_burst
+    import beyond_qsm
+    import beyond_stealing
+    import kernels_bench
+    import roofline_report
+
+    sections = [
+        ("kernels_bench", kernels_bench.main),
+        ("fig3_linear", fig3_linear.main),
+        ("fig4_as", fig4_as.main),
+        ("fig5_breakdown", fig5_breakdown.main),
+        ("fig6_redefined", fig6_redefined.main),
+        ("fig7_perprocess", fig7_perprocess.main),
+        ("beyond_qsm", beyond_qsm.main),
+        ("beyond_stealing", beyond_stealing.main),
+        ("beyond_burst", beyond_burst.main),
+        ("roofline_report", roofline_report.main),
+    ]
+    failures = []
+    for name, fn in sections:
+        if args.only and name != args.only:
+            continue
+        print(f"\n===== {name} =====")
+        t0 = time.time()
+        try:
+            fn()
+            print(f"# ({name}: {time.time() - t0:.0f}s)")
+        except Exception:
+            traceback.print_exc()
+            failures.append(name)
+    if failures:
+        print(f"\nFAILED sections: {failures}")
+        raise SystemExit(1)
+    print("\nall benchmark sections completed")
+
+
+if __name__ == "__main__":
+    main()

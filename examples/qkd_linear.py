@@ -1,0 +1,43 @@
+"""Linear-topology QKD strong scaling — the paper's §III-B experiment,
+end to end: simulate, decompose per-process time, print the scaling table.
+
+    PYTHONPATH=src python examples/qkd_linear.py [--routers 256]
+"""
+import argparse
+
+from repro.core import (
+    EngineConfig, FRONTIER, Simulator, breakdown, linear_network,
+    make_partition,
+)
+from repro.core.costmodel import SEQUENCE_PY
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--routers", type=int, default=256)
+    ap.add_argument("--photons", type=int, default=32)
+    args = ap.parse_args()
+
+    net = linear_network(n_routers=args.routers, n_photons=args.photons,
+                         period_ns=4_000, hop_delay_ns=25_000, loss_p=0.1)
+    print(f"{args.routers} routers, {len(net.sessions)} QKD sessions")
+    print("S,compute_s,socket_s,mpi_s,total_s,speedup")
+    base = None
+    for S in (1, 2, 4, 8, 16):
+        part = make_partition(net, S, scheme="contiguous")
+        cfg = EngineConfig(n_shards=S, pool_cap=max(65_536 // S, 2_048),
+                           qsm_cap=max(8_192 // S, 128),
+                           outbox_cap=max(8_192 // S, 256),
+                           route_cap=max(8_192 // S, 256))
+        res = Simulator(net, part, cfg).run()
+        bd = breakdown(res.metrics, S, FRONTIER, SEQUENCE_PY)
+        av = bd.averages()
+        total = bd.total_wall
+        base = base or total
+        print(f"{S},{av['compute']:.3f},{av['qsm']:.3f},"
+              f"{av['wait'] + av['comm']:.3f},{total:.3f},"
+              f"{base / total:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Quickstart: simulate a small QKD network on 4 parallel timelines.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.core import (
+    EngineConfig, Simulator, linear_network, make_partition,
+)
+
+
+def main():
+    # 16 routers in a chain, one BB84 session per adjacent pair
+    net = linear_network(n_routers=16, n_photons=200, period_ns=2_000,
+                         hop_delay_ns=25_000, loss_p=0.15)
+
+    # partition routers across 4 parallel timelines (the paper's "processes")
+    part = make_partition(net, 4, scheme="sa")
+
+    cfg = EngineConfig(n_shards=4, pool_cap=8_192, qsm_cap=2_048,
+                       outbox_cap=2_048, route_cap=512)
+    sim = Simulator(net, part, cfg)
+    res = sim.run()
+
+    print(f"epochs run          : {res.n_epochs}")
+    print(f"photons emitted     : {res.emitted.sum()}")
+    print(f"photons detected    : {res.detected.sum()} "
+          f"({res.detected.sum() / res.emitted.sum():.1%})")
+    print(f"sifted key bits     : {res.sifted.sum()} "
+          f"(~50% of detected, BB84 basis match)")
+    print(f"QBER                : {res.qber:.4f} (0 = noiseless channel)")
+    print(f"per-session keys    : {res.sifted.tolist()}")
+    print(f"result fingerprint  : {res.fingerprint():#x} "
+          f"(identical for ANY shard count)")
+    assert res.overflow == 0 and res.stale_reads == 0
+
+
+if __name__ == "__main__":
+    main()

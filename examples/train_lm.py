@@ -1,0 +1,54 @@
+"""End-to-end LM training with checkpoint/resume on the llama3.2 family.
+
+Default is CPU-sized (~7M params, 200 steps, loss visibly descends);
+``--full`` trains a ~100M-param llama3.2-style config (same code path,
+sized for a real accelerator).
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 200] [--full]
+"""
+import argparse
+import dataclasses
+import tempfile
+
+from repro.configs import registry as R
+from repro.runtime.trainer import TrainConfig, Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--full", action="store_true",
+                    help="~100M-param config (accelerator-sized)")
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    base = R.get_config("llama3.2-1b")
+    if args.full:
+        cfg = dataclasses.replace(
+            base, n_layers=12, d_model=768, n_heads=12, n_kv_heads=4,
+            head_dim=64, d_ff=2048, vocab_size=32_000)
+        seq, batch = 512, 8
+    else:
+        cfg = dataclasses.replace(
+            base, n_layers=4, d_model=256, n_heads=4, n_kv_heads=2,
+            head_dim=64, d_ff=512, vocab_size=2_048)
+        seq, batch = 128, 8
+
+    ckpt = args.ckpt_dir or tempfile.mkdtemp(prefix="repro_ckpt_")
+    tc = TrainConfig(arch=cfg, steps=args.steps, lr=1e-3, seq_len=seq,
+                     global_batch=batch, ckpt_dir=ckpt, ckpt_every=50)
+    tr = Trainer(tc)
+    n_params = sum(x.size for x in __import__("jax").tree.leaves(tr.params))
+    print(f"arch={cfg.name} params={n_params / 1e6:.1f}M "
+          f"seq={seq} batch={batch} ckpt={ckpt}")
+    summary = tr.train()
+    first = tr.timer.records[0].loss
+    print(f"loss: {first:.3f} -> {summary['final_loss']:.3f} over "
+          f"{summary['steps']} steps "
+          f"({summary['mean_step_s'] * 1e3:.0f} ms/step)")
+    print("summary:", summary)
+    assert summary["final_loss"] < first
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+from repro.configs.base import (  # noqa: F401
+    ALL_SHAPES, ArchConfig, ShapeConfig,
+    DECODE_32K, LONG_500K, PREFILL_32K, TRAIN_4K,
+)
+from repro.configs.registry import (  # noqa: F401
+    ARCHS, SHAPES, get_config, smoke_config,
+)

@@ -1,0 +1,114 @@
+"""Architecture config schema for the 10 assigned architectures.
+
+One composable decoder/enc-dec substrate (repro.models) instantiates every
+architecture from this dataclass; `block_pattern` is the repeating unit
+scanned over depth (keeps HLO small so 512-device dry-run compiles stay
+fast).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+# block kinds usable in block_pattern
+ATTN = "attn"                # global causal attention + MLP
+ATTN_LOCAL = "attn_local"    # sliding-window attention + MLP
+MOE = "moe"                  # attention + MoE FFN
+MAMBA2 = "mamba2"            # Mamba2 SSM mixer
+SLSTM = "slstm"              # xLSTM scalar-memory block
+MLSTM = "mlstm"              # xLSTM matrix-memory block
+SHARED_ATTN = "shared_attn"  # zamba2: one shared transformer block reused
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                       # dense|moe|ssm|hybrid|audio|vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+    block_pattern: Tuple[str, ...]    # repeats to cover n_layers
+    mlp_kind: str = "swiglu"          # swiglu|geglu
+    qkv_bias: bool = False
+    # MoE
+    n_experts: int = 0
+    moe_top_k: int = 0
+    capacity_factor: float = 1.25
+    # SSM
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_chunk: int = 256
+    # attention details
+    window: Optional[int] = None      # sliding-window size for attn_local
+    rope_theta: float = 10_000.0
+    # encoder-decoder (whisper): encoder layers + stub frame count
+    encoder_layers: int = 0
+    encoder_frames: int = 0
+    # vlm (pixtral): stub patch-embedding prefix length
+    patch_tokens: int = 0
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = True
+    # whether a sub-quadratic long-context serve path exists (SSM/hybrid)
+    subquadratic: bool = False
+    # unroll the over-groups scan (used by the dry-run's R=1/R=2 depth
+    # lowerings: XLA cost analysis visits a while body once, so roofline
+    # deltas need straight-line HLO)
+    unroll_groups: bool = False
+    # flash-equivalent chunked attention (non-TPU lowering path)
+    attn_chunk: int = 1024
+    # §Perf optimization: statically skip fully-masked (q-block, kv-chunk)
+    # pairs in causal attention (needs unroll_groups)
+    attn_causal_skip: bool = False
+    # §Perf optimization: slice MoE dispatch into per-data-shard segments
+    # (local sort/scatter per slice, per-slice capacity) instead of one
+    # global dispatch — removes the all-gathers a global argsort forces.
+    # 0 = global dispatch (baseline).
+    moe_dp_slices: int = 0
+    # §Perf optimization v3: explicit expert parallelism via shard_map
+    # (tokens replicated across 'model'; each shard runs its E/TP experts
+    # locally; one psum combines) — removes GSPMD resharding guesswork.
+    moe_shard_map: bool = False
+    # §Perf optimization: keep the residual stream sequence-sharded over
+    # 'model' THROUGH every block (Megatron-style SP) instead of only at
+    # group boundaries — the MLP then never needs a seq gather and
+    # attention gathers only K/V (kv_dim/d_model of the bytes).
+    sp_residual: bool = False
+
+    @property
+    def pattern_repeats(self) -> int:
+        assert self.n_layers % len(self.block_pattern) == 0, \
+            (self.name, self.n_layers, self.block_pattern)
+        return self.n_layers // len(self.block_pattern)
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    def scaled(self, **overrides) -> "ArchConfig":
+        """Reduced copy for smoke tests."""
+        return dataclasses.replace(self, **overrides)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One (input-shape) cell: training or serving geometry."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+TRAIN_4K = ShapeConfig("train_4k", 4_096, 256, "train")
+PREFILL_32K = ShapeConfig("prefill_32k", 32_768, 32, "prefill")
+DECODE_32K = ShapeConfig("decode_32k", 32_768, 128, "decode")
+LONG_500K = ShapeConfig("long_500k", 524_288, 1, "decode")
+ALL_SHAPES = (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)

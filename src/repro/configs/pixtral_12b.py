@@ -1,0 +1,22 @@
+"""pixtral-12b [vlm] — mistral-nemo decoder; the pixtral-ViT frontend is a
+STUB (input_specs supplies precomputed patch embeddings prepended to text).
+
+40L d_model=5120 32H (GQA kv=8) d_ff=14336 vocab=131072
+[hf:mistralai/Pixtral-12B-2409; unverified].  patch_tokens=256 is the stub
+image budget per sequence.
+"""
+from repro.configs.base import ArchConfig, ATTN
+
+CONFIG = ArchConfig(
+    name="pixtral-12b",
+    family="vlm",
+    n_layers=40,
+    d_model=5120,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab_size=131072,
+    block_pattern=(ATTN,),
+    patch_tokens=256,
+)

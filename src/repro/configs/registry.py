@@ -1,0 +1,63 @@
+"""Architecture registry: ``--arch <id>`` lookup + smoke-scale reduction."""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs import base as B
+from repro.configs.gemma3_12b import CONFIG as GEMMA3_12B
+from repro.configs.gemma_2b import CONFIG as GEMMA_2B
+from repro.configs.granite_moe_3b_a800m import CONFIG as GRANITE_MOE
+from repro.configs.llama3p2_1b import CONFIG as LLAMA32_1B
+from repro.configs.moonshot_v1_16b_a3b import CONFIG as MOONSHOT
+from repro.configs.pixtral_12b import CONFIG as PIXTRAL_12B
+from repro.configs.qwen1p5_110b import CONFIG as QWEN15_110B
+from repro.configs.whisper_tiny import CONFIG as WHISPER_TINY
+from repro.configs.xlstm_125m import CONFIG as XLSTM_125M
+from repro.configs.zamba2_2p7b import CONFIG as ZAMBA2_27B
+
+ARCHS = {c.name: c for c in (
+    ZAMBA2_27B, GEMMA3_12B, QWEN15_110B, LLAMA32_1B, GEMMA_2B,
+    XLSTM_125M, MOONSHOT, GRANITE_MOE, WHISPER_TINY, PIXTRAL_12B,
+)}
+
+SHAPES = {s.name: s for s in B.ALL_SHAPES}
+
+
+def get_config(name: str) -> B.ArchConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+def smoke_config(cfg: B.ArchConfig) -> B.ArchConfig:
+    """Reduced same-family config: small width/depth/vocab, few experts —
+    runs one train/forward step on CPU in the per-arch smoke tests."""
+    n_heads = min(cfg.n_heads, 4)
+    ratio = max(1, cfg.n_heads // max(cfg.n_kv_heads, 1))
+    n_kv = max(1, n_heads // ratio)
+    upd = dict(
+        n_layers=len(cfg.block_pattern),
+        d_model=128,
+        n_heads=n_heads,
+        n_kv_heads=n_kv,
+        head_dim=32,
+        d_ff=0 if cfg.d_ff == 0 else 256,
+        vocab_size=512,
+    )
+    if cfg.n_experts:
+        upd.update(n_experts=8, moe_top_k=min(cfg.moe_top_k, 2), d_ff=64)
+    if cfg.ssm_state:
+        upd.update(ssm_state=16, ssm_chunk=16)
+    if cfg.window:
+        upd.update(window=16)
+    if cfg.encoder_layers:
+        upd.update(encoder_layers=2, encoder_frames=24)
+    if cfg.patch_tokens:
+        upd.update(patch_tokens=8)
+    return dataclasses.replace(cfg, **upd)
+
+
+SMOKE_SHAPE_TRAIN = B.ShapeConfig("smoke_train", seq_len=64, global_batch=2,
+                                  kind="train")
+SMOKE_SHAPE_DECODE = B.ShapeConfig("smoke_decode", seq_len=64,
+                                   global_batch=2, kind="decode")

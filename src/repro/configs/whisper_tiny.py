@@ -1,0 +1,22 @@
+"""whisper-tiny [audio] — encoder-decoder; conv frontend is a STUB
+(input_specs supplies precomputed frame embeddings).
+
+4L d_model=384 6H (kv=6) d_ff=1536 vocab=51865 [arXiv:2212.04356;
+unverified].  encoder_frames=1500 (30 s at 50 Hz after conv downsampling).
+"""
+from repro.configs.base import ArchConfig, ATTN
+
+CONFIG = ArchConfig(
+    name="whisper-tiny",
+    family="audio",
+    n_layers=4,
+    d_model=384,
+    n_heads=6,
+    n_kv_heads=6,
+    head_dim=64,
+    d_ff=1536,
+    vocab_size=51865,
+    block_pattern=(ATTN,),
+    encoder_layers=4,
+    encoder_frames=1500,
+)

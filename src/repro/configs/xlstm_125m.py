@@ -1,0 +1,21 @@
+"""xlstm-125m [ssm] — alternating mLSTM / sLSTM blocks.
+
+12L d_model=768 4H (kv=4) d_ff=0 vocab=50304 [arXiv:2405.04517;
+unverified].  d_ff=0: blocks carry their own projections, no separate MLP.
+Recurrent state -> O(1) decode -> runs long_500k.
+"""
+from repro.configs.base import ArchConfig, MLSTM, SLSTM
+
+CONFIG = ArchConfig(
+    name="xlstm-125m",
+    family="ssm",
+    n_layers=12,
+    d_model=768,
+    n_heads=4,
+    n_kv_heads=4,
+    head_dim=192,
+    d_ff=0,
+    vocab_size=50304,
+    block_pattern=(MLSTM, SLSTM),
+    subquadratic=True,
+)

@@ -1,0 +1,24 @@
+"""zamba2-2.7b [hybrid] — Mamba2 backbone + weight-shared attention block.
+
+54L d_model=2560 32H (GQA kv=32) d_ff=10240 vocab=32000, ssm_state=64
+[arXiv:2411.15242; hf].  Pattern: 9 groups of (5x Mamba2 + 1 shared-attn);
+the shared block's parameters are a single un-stacked set reused by every
+group (Zamba2's weight sharing).  Sub-quadratic -> runs long_500k.
+"""
+from repro.configs.base import ArchConfig, MAMBA2, SHARED_ATTN
+
+CONFIG = ArchConfig(
+    name="zamba2-2.7b",
+    family="hybrid",
+    n_layers=54,
+    d_model=2560,
+    n_heads=32,
+    n_kv_heads=32,
+    head_dim=80,
+    d_ff=10240,
+    vocab_size=32000,
+    block_pattern=(MAMBA2, MAMBA2, MAMBA2, MAMBA2, MAMBA2, SHARED_ATTN),
+    ssm_state=64,
+    ssm_expand=2,
+    subquadratic=True,
+)

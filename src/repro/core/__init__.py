@@ -1,0 +1,26 @@
+"""repro.core — TPU-native parallel discrete-event quantum network simulator.
+
+The paper's system (parallel SeQUeNCe) rebuilt as a vectorized,
+collective-synchronized PDES in JAX.  See DESIGN.md.
+"""
+from repro.core.costmodel import (
+    FRONTIER, TPU_POD, ComputeModel, EpochBreakdown, HardwareModel,
+    breakdown, calibrate,
+)
+from repro.core.partition import (
+    cut_channels, cut_sessions, load_imbalance, make_partition,
+)
+from repro.core.simulator import (
+    SimResults, Simulator, auto_lookahead, auto_window, build_state,
+    make_tables,
+)
+from repro.core.timeline import EngineConfig
+from repro.core.topology import Network, Session, as_network, linear_network
+
+__all__ = [
+    "FRONTIER", "TPU_POD", "ComputeModel", "EpochBreakdown", "HardwareModel",
+    "breakdown", "calibrate", "cut_channels", "cut_sessions",
+    "load_imbalance", "make_partition", "SimResults", "Simulator",
+    "auto_lookahead", "auto_window", "build_state", "make_tables",
+    "EngineConfig", "Network", "Session", "as_network", "linear_network",
+]

@@ -1,0 +1,183 @@
+"""Calibrated performance model for multi-node scaling projections.
+
+This container exposes one CPU device, so wall-clock scaling beyond a
+handful of host devices cannot be *measured*; the paper's figures are
+reproduced by combining
+  * REAL per-shard event/wave counts from actual simulation runs (the
+    workload distribution is exact — it is the straggler), with
+  * a calibrated linear cost model for compute and an alpha-beta model for
+    communication.
+
+`calibrate()` measures per-event and per-wave costs of the vectorized engine
+on this host.  Hardware presets translate collective sizes into seconds.
+Every benchmark CSV labels modeled columns explicitly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.core.types import Metrics
+
+EVENT_BYTES = 7 * 4          # one event record (7 int32 fields)
+QSM_REQ_BYTES = 5 * 4        # one QSM request/reply
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareModel:
+    """Alpha-beta communication constants + serial server costs."""
+
+    name: str
+    alpha_sync_s: float       # latency of a barrier/allreduce hop
+    link_bw_Bps: float        # per-link bandwidth for bulk exchange
+    server_req_s: float       # global-QSM server per-request service time
+    server_alpha_s: float     # global-QSM per-batch overhead (per client)
+
+    def sync_time(self, n_shards: int) -> float:
+        return self.alpha_sync_s * max(1, int(np.log2(max(n_shards, 2))))
+
+    def exchange_time(self, n_bytes: float, n_shards: int) -> float:
+        if n_shards <= 1:
+            return 0.0
+        return self.alpha_sync_s + n_bytes / self.link_bw_Bps
+
+
+# Frontier-like: HPE Slingshot 25 GB/s/NIC, ~5 us MPI latency; the Python
+# QSM server of the paper services requests at ~10 us/req over sockets.
+FRONTIER = HardwareModel("frontier", alpha_sync_s=5e-6, link_bw_Bps=25e9,
+                         server_req_s=10e-6, server_alpha_s=50e-6)
+# TPU v5e pod: ~1 us ICI collective latency, 50 GB/s/link, QSM is compiled
+# code on-chip (no socket/server penalty).
+TPU_POD = HardwareModel("tpu_v5e", alpha_sync_s=1e-6, link_bw_Bps=50e9,
+                        server_req_s=2e-7, server_alpha_s=2e-6)
+
+
+@dataclasses.dataclass(frozen=True)
+class ComputeModel:
+    """t_busy = c_epoch + c_wave * waves + c_event * events  (seconds)."""
+
+    c_epoch: float
+    c_wave: float
+    c_event: float
+
+    def busy(self, waves: np.ndarray, events: np.ndarray) -> np.ndarray:
+        return self.c_epoch + self.c_wave * waves + self.c_event * events
+
+
+# Sequential-SeQUeNCe-like per-event cost (Python heap + handler ~ 20 us);
+# used when projecting the paper's own numbers.
+SEQUENCE_PY = ComputeModel(c_epoch=50e-6, c_wave=0.0, c_event=20e-6)
+# Our vectorized engine: calibrated on this host by calibrate().
+DEFAULT_VECTOR = ComputeModel(c_epoch=20e-6, c_wave=5e-6, c_event=0.05e-6)
+
+
+def calibrate(runner=None) -> ComputeModel:
+    """Fit (c_epoch, c_wave, c_event) from real runs on this host.
+
+    `runner(n_routers, n_photons)` must run a 1-shard sim and return
+    (wall_seconds, total_epochs, total_waves, total_events); default uses a
+    linear network.
+    """
+    if runner is None:
+        from repro.core.partition import make_partition
+        from repro.core.simulator import Simulator
+        from repro.core.timeline import EngineConfig
+        from repro.core.topology import linear_network
+
+        def runner(n_routers, n_photons):
+            net = linear_network(n_routers=n_routers, n_photons=n_photons,
+                                 loss_p=0.1)
+            cfg = EngineConfig(n_shards=1, pool_cap=4 * n_routers,
+                               qsm_cap=128, outbox_cap=128, route_cap=32)
+            sim = Simulator(net, make_partition(net, 1), cfg)
+            sim.run(max_epochs=8, chunk=8)  # warmup/compile
+            sim2 = Simulator(net, make_partition(net, 1), cfg)
+            t0 = time.perf_counter()
+            r = sim2.run(max_epochs=4096, chunk=256)
+            wall = time.perf_counter() - t0
+            m = r.metrics
+            return (wall, r.n_epochs, int(m.n_waves.sum()),
+                    int(m.events_by_kind.sum()))
+
+    rows, ys = [], []
+    for n_routers, n_photons in ((16, 32), (64, 64), (128, 128)):
+        wall, ep, waves, events = runner(n_routers, n_photons)
+        rows.append([ep, waves, events])
+        ys.append(wall)
+    A = np.asarray(rows, float)
+    y = np.asarray(ys, float)
+    coef, *_ = np.linalg.lstsq(A, y, rcond=None)
+    coef = np.maximum(coef, [1e-7, 1e-7, 1e-9])
+    return ComputeModel(c_epoch=float(coef[0]), c_wave=float(coef[1]),
+                        c_event=float(coef[2]))
+
+
+@dataclasses.dataclass
+class EpochBreakdown:
+    """Per-shard, per-epoch modeled times (the paper's Figs 3/5/6 data)."""
+
+    compute: np.ndarray   # (S, E) busy time
+    wait: np.ndarray      # (S, E) straggler wait (barrier-split, Fig 5)
+    comm: np.ndarray      # (S, E) sync + outbox exchange
+    qsm: np.ndarray       # (S, E) global-QSM service ("socket" in Fig 3)
+
+    @property
+    def epoch_wall(self) -> np.ndarray:  # (E,)
+        return (self.compute + self.wait).max(axis=0) + \
+            self.comm.max(axis=0) + self.qsm.max(axis=0)
+
+    @property
+    def total_wall(self) -> float:
+        return float(self.epoch_wall.sum())
+
+    def averages(self) -> dict:
+        """Per-process averages as plotted by the paper."""
+        return dict(
+            compute=float(self.compute.sum(axis=1).mean()),
+            wait=float(self.wait.sum(axis=1).mean()),
+            comm=float(self.comm.sum(axis=1).mean()),
+            qsm=float(self.qsm.sum(axis=1).mean()),
+        )
+
+
+def breakdown(metrics: Metrics, n_shards: int, hw: HardwareModel,
+              cm: ComputeModel, qsm_mode: str = "gathered",
+              merge_wait_into_compute: bool = False) -> EpochBreakdown:
+    """Convert per-epoch Metrics (S, E, ...) into modeled times.
+
+    merge_wait_into_compute reproduces the paper's Fig 6 redefinition
+    (wait counted as compute, "which more accurately portrays the
+    limitations of its scalability").
+    """
+    waves = np.asarray(metrics.n_waves, dtype=float)          # (S, E)
+    events = np.asarray(metrics.events_by_kind, float).sum(-1)  # (S, E)
+    outbox = np.asarray(metrics.outbox_sent, float)           # (S, E)
+    qsm_req = np.asarray(metrics.qsm_requests, float)         # (S, E)
+
+    busy = cm.busy(waves, events)                             # (S, E)
+    wait = busy.max(axis=0, keepdims=True) - busy             # (S, E)
+
+    sync = hw.sync_time(n_shards)
+    comm = sync + np.vectorize(
+        lambda b: hw.exchange_time(b * EVENT_BYTES, n_shards))(outbox)
+
+    if qsm_mode == "gathered":
+        # single server: every shard waits for the full batch
+        total_req = qsm_req.sum(axis=0, keepdims=True)        # (1, E)
+        q = hw.server_alpha_s * (total_req > 0) + \
+            hw.server_req_s * total_req
+        q = np.broadcast_to(q, busy.shape).copy()
+    else:
+        # hash-partitioned: each shard serves ~1/S of the batch, plus an
+        # all_to_all each way
+        per = qsm_req.sum(axis=0, keepdims=True) / max(n_shards, 1)
+        q = hw.server_req_s * per + 2 * np.vectorize(
+            lambda b: hw.exchange_time(b * QSM_REQ_BYTES, n_shards))(per)
+        q = np.broadcast_to(q, busy.shape).copy()
+
+    if merge_wait_into_compute:
+        busy = busy + wait
+        wait = np.zeros_like(wait)
+    return EpochBreakdown(compute=busy, wait=wait, comm=comm, qsm=q)

@@ -1,0 +1,103 @@
+"""Event-pool operations: fixed-capacity vectorized insert/select.
+
+The original SeQUeNCe keeps a Python heap and pops one event at a time; on
+TPU we keep a flat struct-of-arrays pool in HBM and operate on it with masked
+vector ops (select-all-in-window, segment-min per causal chain, rank-scatter
+insertion).  See DESIGN.md §3.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import EventPool, Staged, KIND_NULL, TIME_MAX
+
+
+def empty_pool(cap: int) -> EventPool:
+    i32 = lambda fill: jnp.full((cap,), fill, dtype=jnp.int32)
+    return EventPool(
+        time=i32(TIME_MAX),
+        kind=i32(KIND_NULL),
+        dst=i32(-1),
+        a0=i32(-1),
+        a1=i32(-1),
+        a2=i32(0),
+        valid=jnp.zeros((cap,), dtype=bool),
+    )
+
+
+def empty_staged(n: int) -> Staged:
+    i32 = lambda fill: jnp.full((n,), fill, dtype=jnp.int32)
+    return Staged(
+        time=i32(TIME_MAX), kind=i32(KIND_NULL), dst=i32(-1),
+        a0=i32(-1), a1=i32(-1), a2=i32(0),
+        valid=jnp.zeros((n,), dtype=bool),
+    )
+
+
+def next_time(pool: EventPool) -> jnp.ndarray:
+    """Earliest timestamp among valid events (TIME_MAX if none)."""
+    return jnp.min(jnp.where(pool.valid, pool.time, TIME_MAX))
+
+
+def occupancy(pool: EventPool) -> jnp.ndarray:
+    return jnp.sum(pool.valid.astype(jnp.int32))
+
+
+def insert(pool: EventPool, staged: Staged):
+    """Scatter staged (masked) events into free pool slots.
+
+    Returns (pool, n_dropped).  Rank-scatter: the i-th live staged event goes
+    to the i-th free slot; overflow events are dropped and counted (an
+    overflow is a capacity-config bug, surfaced by the caller).
+    """
+    cap = pool.capacity
+    free = ~pool.valid
+    # position of the k-th free slot, padded with `cap` (out of range)
+    free_slots = jnp.nonzero(free, size=cap, fill_value=cap)[0]
+    n_free = jnp.sum(free.astype(jnp.int32))
+
+    live = staged.valid
+    rank = jnp.cumsum(live.astype(jnp.int32)) - 1          # rank among live
+    ok = live & (rank < n_free)
+    slot = jnp.where(ok, free_slots[jnp.clip(rank, 0, cap - 1)], cap)
+    n_dropped = jnp.sum((live & ~ok).astype(jnp.int32))
+
+    def scat(dst_arr, src_arr, fill_ok):
+        # drop-out-of-range scatter: slot == cap rows are discarded
+        return dst_arr.at[slot].set(
+            jnp.where(fill_ok, src_arr, dst_arr[jnp.clip(slot, 0, cap - 1)]),
+            mode="drop",
+        )
+
+    new = EventPool(
+        time=scat(pool.time, staged.time, ok),
+        kind=scat(pool.kind, staged.kind, ok),
+        dst=scat(pool.dst, staged.dst, ok),
+        a0=scat(pool.a0, staged.a0, ok),
+        a1=scat(pool.a1, staged.a1, ok),
+        a2=scat(pool.a2, staged.a2, ok),
+        valid=pool.valid.at[slot].set(ok, mode="drop"),
+    )
+    return new, n_dropped
+
+
+def invalidate(pool: EventPool, mask: jnp.ndarray) -> EventPool:
+    """Mark events under `mask` as consumed."""
+    return pool._replace(
+        valid=pool.valid & ~mask,
+        time=jnp.where(mask, TIME_MAX, pool.time),
+        kind=jnp.where(mask, KIND_NULL, pool.kind),
+    )
+
+
+def concat_staged(*parts: Staged) -> Staged:
+    return Staged(*[jnp.concatenate(fs) for fs in zip(*parts)])
+
+
+def pool_as_staged(pool: EventPool, mask: jnp.ndarray) -> Staged:
+    """View (masked) pool entries as a staging buffer (for outbox routing)."""
+    return Staged(
+        time=pool.time, kind=pool.kind, dst=pool.dst,
+        a0=pool.a0, a1=pool.a1, a2=pool.a2, valid=mask,
+    )

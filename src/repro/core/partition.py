@@ -1,0 +1,150 @@
+"""Network partitioning (host-side preprocessing).
+
+The paper reproduces [14]'s simulated-annealing partitioner but restricts the
+energy function to *topology-only* knowledge: the number of cross-process
+quantum channels.  We implement exactly that as `simulated_annealing`, plus
+baselines (`contiguous`, `random_partition`) and the beyond-paper
+`greedy_load_balance` that uses per-router predicted load (sessions touching
+the router) — the kind of workload knowledge the paper argues one should not
+have to require, included so benchmarks can quantify how much it buys.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.topology import Network
+
+
+def contiguous(net: Network, n_parts: int) -> np.ndarray:
+    """Block partition by router id (natural for the linear topology)."""
+    return (np.arange(net.n_routers) * n_parts // net.n_routers).astype(
+        np.int32)
+
+
+def random_partition(net: Network, n_parts: int, seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, n_parts, size=net.n_routers).astype(np.int32)
+
+
+def cut_channels(net: Network, part: np.ndarray) -> int:
+    """Energy function from the paper: cross-partition quantum channels."""
+    return int(sum(1 for c in net.channels if part[c.u] != part[c.v]))
+
+
+def cut_sessions(net: Network, part: np.ndarray) -> int:
+    return int(sum(1 for s in net.sessions if part[s.src] != part[s.dst]))
+
+
+def router_load(net: Network) -> np.ndarray:
+    """Predicted per-router event load: photons of sessions touching it."""
+    load = np.zeros(net.n_routers, dtype=np.int64)
+    for s in net.sessions:
+        load[s.src] += s.n_photons
+        load[s.dst] += s.n_photons
+    return load
+
+
+def load_imbalance(net: Network, part: np.ndarray, n_parts: int) -> float:
+    """max/mean per-part predicted load (1.0 = perfectly balanced)."""
+    load = router_load(net)
+    per = np.zeros(n_parts, dtype=np.int64)
+    np.add.at(per, part, load)
+    mean = per.mean() if per.mean() > 0 else 1.0
+    return float(per.max() / mean)
+
+
+def simulated_annealing(
+    net: Network,
+    n_parts: int,
+    seed: int = 0,
+    n_steps: int = 20_000,
+    t0: float = 2.0,
+    t1: float = 0.01,
+    balance_slack: float = 0.25,
+    init: np.ndarray | None = None,
+) -> np.ndarray:
+    """SA over router→part assignment, energy = cross-part quantum channels.
+
+    A hard per-part size constraint (within `balance_slack` of even) mirrors
+    the router-count balancing the upstream partitioner applies; the energy
+    itself is topology-only, per the paper.
+    """
+    rng = np.random.default_rng(seed)
+    part = (init if init is not None else contiguous(net, n_parts)).copy()
+    n = net.n_routers
+    cap = int(np.ceil(n / n_parts * (1.0 + balance_slack)))
+    sizes = np.bincount(part, minlength=n_parts)
+
+    # adjacency lists for incremental energy deltas
+    nbrs: list[list[int]] = [[] for _ in range(n)]
+    for c in net.channels:
+        nbrs[c.u].append(c.v)
+        nbrs[c.v].append(c.u)
+
+    energy = cut_channels(net, part)
+    temps = np.geomspace(t0, t1, num=n_steps)
+    for step in range(n_steps):
+        r = int(rng.integers(n))
+        p_new = int(rng.integers(n_parts))
+        p_old = int(part[r])
+        if p_new == p_old or sizes[p_new] >= cap:
+            continue
+        delta = 0
+        for v in nbrs[r]:
+            pv = part[v]
+            delta += int(pv != p_new) - int(pv != p_old)
+        if delta <= 0 or rng.random() < np.exp(-delta / temps[step]):
+            part[r] = p_new
+            sizes[p_old] -= 1
+            sizes[p_new] += 1
+            energy += delta
+    assert energy == cut_channels(net, part)
+    return part.astype(np.int32)
+
+
+def greedy_load_balance(net: Network, n_parts: int) -> np.ndarray:
+    """Beyond-paper: LPT bin-packing on predicted router load, then a local
+    cut-reduction sweep that only accepts moves preserving balance."""
+    load = router_load(net)
+    order = np.argsort(-load)
+    per = np.zeros(n_parts, dtype=np.int64)
+    part = np.zeros(net.n_routers, dtype=np.int32)
+    for r in order:
+        p = int(np.argmin(per))
+        part[r] = p
+        per[p] += max(int(load[r]), 1)
+
+    nbrs: list[list[int]] = [[] for _ in range(net.n_routers)]
+    for c in net.channels:
+        nbrs[c.u].append(c.v)
+        nbrs[c.v].append(c.u)
+    mean = per.mean()
+    for _ in range(2):
+        for r in range(net.n_routers):
+            if not nbrs[r]:
+                continue
+            votes = np.bincount([part[v] for v in nbrs[r]],
+                                minlength=n_parts)
+            p_best = int(np.argmax(votes))
+            p_old = int(part[r])
+            if p_best != p_old and votes[p_best] > votes[p_old]:
+                if per[p_best] + load[r] <= 1.15 * mean + load[r]:
+                    per[p_old] -= max(int(load[r]), 1)
+                    per[p_best] += max(int(load[r]), 1)
+                    part[r] = p_best
+    return part
+
+
+def make_partition(net: Network, n_parts: int, scheme: str = "sa",
+                   seed: int = 0) -> np.ndarray:
+    if n_parts == 1:
+        return np.zeros(net.n_routers, dtype=np.int32)
+    if scheme == "contiguous":
+        return contiguous(net, n_parts)
+    if scheme == "random":
+        return random_partition(net, n_parts, seed)
+    if scheme == "sa":
+        return simulated_annealing(net, n_parts, seed)
+    if scheme == "greedy_load":
+        return greedy_load_balance(net, n_parts)
+    raise ValueError(f"unknown partition scheme: {scheme}")

@@ -1,0 +1,247 @@
+"""BB84 QKD event handlers, fully vectorized over pool slots.
+
+Event flow per photon (matching the dominant-event structure the paper's
+workload analysis identifies — quantum-channel events dominate):
+
+  EMIT(sender)    -> prepare (bit, tx_basis); write to sender local store and
+                     (cross-shard sessions) to the global QSM; schedule
+                     ARRIVE(t+q_delay) and the next EMIT(t+period).
+  ARRIVE(recv)    -> photon lost w.p. loss_p; if detected, choose rx_basis;
+                     local sessions measure against the local store in-wave;
+                     cross-shard sessions enqueue a QSM MEASURE request
+                     (processed batched at epoch end, like SeQUeNCe's
+                     batched socket requests).
+  CLASSICAL(send) -> basis reconciliation; matched bases contribute a sifted
+                     key bit (XOR-folded into key_hash) and QBER errors.
+
+Handlers compute over ALL pool slots and apply under an execution mask, so a
+wave costs O(capacity) vector work regardless of how many events fire.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.core import rng
+from repro.core.types import (
+    KIND_ARRIVE, KIND_CLASSICAL, KIND_EMIT, QSM_MEASURE, QSM_WRITE,
+    EventPool, QsmStore, SessionState, Staged,
+)
+
+# photon uid packing: uid = session << PHOTON_BITS | photon
+PHOTON_BITS = 16
+MAX_PHOTONS = 1 << PHOTON_BITS
+
+
+class StaticTables(NamedTuple):
+    """Replicated per-session parameter tables + topology maps."""
+
+    src: jnp.ndarray       # int32[S_n] sender router
+    dst: jnp.ndarray       # int32[S_n] receiver router
+    n_photons: jnp.ndarray
+    period: jnp.ndarray
+    q_delay: jnp.ndarray
+    c_delay: jnp.ndarray
+    loss_p: jnp.ndarray    # float32[S_n]
+    start: jnp.ndarray
+    n_routers: int
+    n_sessions: int
+
+
+class HandlerOut(NamedTuple):
+    staged: Staged              # new events ((burst+1) slots per pool slot)
+    sess: SessionState
+    local_store: QsmStore
+    qsm_op: jnp.ndarray         # int32[cap*burst] QSM request ops
+    qsm_session: jnp.ndarray    # int32[cap*burst]
+    qsm_photon: jnp.ndarray     # int32[cap*burst]
+    qsm_payload: jnp.ndarray    # int32[cap*burst]
+    qsm_reply_time: jnp.ndarray  # int32[cap*burst]
+    stale: jnp.ndarray          # int32[] stale local-store reads
+
+
+def _uid(session: jnp.ndarray, photon: jnp.ndarray) -> jnp.ndarray:
+    return (session << PHOTON_BITS) | photon
+
+
+def pack_classical(outcome, rx_basis, detected):
+    return outcome | (rx_basis << 1) | (detected << 2)
+
+
+def unpack_classical(a2):
+    return a2 & 1, (a2 >> 1) & 1, (a2 >> 2) & 1
+
+
+def store_write(store: QsmStore, sess_ids, photons, bits, bases, mask):
+    w = store.window
+    col = photons % w
+    sid = jnp.where(mask, sess_ids, store.bit.shape[0])  # OOB -> dropped
+    return QsmStore(
+        bit=store.bit.at[sid, col].set(bits, mode="drop"),
+        basis=store.basis.at[sid, col].set(bases, mode="drop"),
+        stamp=store.stamp.at[sid, col].set(photons, mode="drop"),
+    )
+
+
+def store_read(store: QsmStore, sess_ids, photons):
+    """Returns (bit, basis, fresh) — fresh=False on window reuse (stale)."""
+    w = store.window
+    col = photons % w
+    sid = jnp.clip(sess_ids, 0, store.bit.shape[0] - 1)
+    fresh = store.stamp[sid, col] == photons
+    return store.bit[sid, col], store.basis[sid, col], fresh
+
+
+def _session_is_local(tables: StaticTables, router_owner, sess_ids):
+    s = jnp.clip(sess_ids, 0, tables.n_sessions - 1)
+    return router_owner[tables.src[s]] == router_owner[tables.dst[s]]
+
+
+def handle_all(
+    pool: EventPool,
+    exec_mask: jnp.ndarray,
+    sess: SessionState,
+    local_store: QsmStore,
+    router_owner: jnp.ndarray,
+    tables: StaticTables,
+    burst: int = 1,
+) -> HandlerOut:
+    """Run all three handlers over the pool under `exec_mask`.
+
+    ``burst > 1`` (§Perf: burst emission) lets one EMIT event emit up to
+    `burst` photons (ARRIVE times t + i*period) before scheduling its
+    successor — valid because BB84 emission is feedback-free (paper obs.
+    #5: sessions independent), deterministic because randomness is keyed
+    by photon uid.  Collapses the serial EMIT-chain depth that sets the
+    wave count per epoch.
+    """
+    cap = pool.capacity
+    s = jnp.clip(pool.a0, 0, tables.n_sessions - 1)
+    p = jnp.clip(pool.a1, 0, MAX_PHOTONS - 1)
+    t = pool.time
+    uid = _uid(s, p)
+    is_local = _session_is_local(tables, router_owner, s)
+
+    m_emit = exec_mask & (pool.kind == KIND_EMIT)
+    m_arrive = exec_mask & (pool.kind == KIND_ARRIVE)
+    m_class = exec_mask & (pool.kind == KIND_CLASSICAL)
+
+    # ---------------- EMIT (bursted) ----------------
+    ioff = jnp.arange(burst, dtype=jnp.int32)[None, :]      # (1, burst)
+    pb = p[:, None] + ioff                                  # (cap, burst)
+    sb = jnp.broadcast_to(s[:, None], (cap, burst))
+    in_session = pb < tables.n_photons[s][:, None]
+    m_emit_b = m_emit[:, None] & in_session
+    uid_b = _uid(sb, jnp.clip(pb, 0, MAX_PHOTONS - 1))
+    bit_b = rng.rand_bit(uid_b, rng.SALT_BIT)
+    basis_b = rng.rand_bit(uid_b, rng.SALT_TX_BASIS)
+    emit_t = t[:, None] + ioff * tables.period[s][:, None]
+
+    # sender always records its preparation locally (used at CLASSICAL);
+    # cross-shard sessions ALSO push the in-flight state to the global QSM.
+    flat = lambda a: a.reshape(cap * burst)
+    local_store = store_write(local_store, flat(sb), flat(pb), flat(bit_b),
+                              flat(basis_b), flat(m_emit_b))
+
+    qsm_op = jnp.where(m_emit_b & ~is_local[:, None], QSM_WRITE, 0)
+    qsm_session = sb
+    qsm_photon = pb
+    qsm_payload = bit_b | (basis_b << 1)
+    qsm_reply_time = jnp.zeros((cap, burst), jnp.int32)
+
+    # staged block A: one ARRIVE per bursted photon
+    stage_a = Staged(
+        time=flat(emit_t + tables.q_delay[s][:, None]),
+        kind=jnp.full((cap * burst,), KIND_ARRIVE, jnp.int32),
+        dst=flat(jnp.broadcast_to(tables.dst[s][:, None], (cap, burst))),
+        a0=flat(sb), a1=flat(jnp.clip(pb, 0, MAX_PHOTONS - 1)),
+        a2=jnp.zeros((cap * burst,), jnp.int32),
+        valid=flat(m_emit_b),
+    )
+    # staged slot B: next EMIT in the chain (if photons remain)
+    n_emitted = jnp.sum(m_emit_b.astype(jnp.int32), axis=1)  # (cap,)
+    p_next = p + n_emitted
+    more = p_next < tables.n_photons[s]
+    stage_b_emit = Staged(
+        time=t + n_emitted * tables.period[s],
+        kind=jnp.full((cap,), KIND_EMIT, jnp.int32),
+        dst=tables.src[s],
+        a0=s, a1=jnp.clip(p_next, 0, MAX_PHOTONS - 1),
+        a2=jnp.zeros((cap,), jnp.int32),
+        valid=m_emit & more,
+    )
+    # `done` is derived at report time (emitted >= n_photons); only counters
+    # are updated here (scatter-add commutes -> wave batching is safe).
+    sess = sess._replace(
+        emitted=sess.emitted.at[s].add(jnp.where(m_emit, n_emitted, 0)))
+
+    # ---------------- ARRIVE ----------------
+    # Quantum-channel transmission + measurement: the paper's dominant event
+    # type, served by the qchannel kernel (Pallas on TPU, oracle on CPU —
+    # bit-identical integer math either way).
+    from repro.kernels.qchannel.ops import transmit_measure
+
+    sbit, sbasis, fresh = store_read(local_store, s, p)
+    det_i, rx_basis, outcome = transmit_measure(
+        uid, tables.loss_p[s], sbit, sbasis)
+    detected = det_i == 1
+    m_det = m_arrive & detected
+
+    sess = sess._replace(
+        detected=sess.detected.at[s].add(jnp.where(m_det, 1, 0)))
+
+    m_local_meas = m_det & is_local
+    stale = jnp.sum(jnp.where(m_local_meas & ~fresh, 1, 0))
+
+    stage_b_classical = Staged(
+        time=t + tables.c_delay[s],
+        kind=jnp.full((cap,), KIND_CLASSICAL, jnp.int32),
+        dst=tables.src[s],
+        a0=s, a1=p,
+        a2=pack_classical(outcome, rx_basis, jnp.ones((cap,), jnp.int32)),
+        valid=m_local_meas,
+    )
+    # cross-shard measurement -> batched global-QSM request (column 0 of
+    # the per-slot request block; EMIT bursts never share a slot with
+    # ARRIVE, so the block is conflict-free)
+    m_glob_meas = m_det & ~is_local
+    qsm_op = qsm_op.at[:, 0].set(
+        jnp.where(m_glob_meas, QSM_MEASURE, qsm_op[:, 0]))
+    qsm_payload = qsm_payload.at[:, 0].set(
+        jnp.where(m_glob_meas, rx_basis, qsm_payload[:, 0]))
+    qsm_reply_time = qsm_reply_time.at[:, 0].set(
+        jnp.where(m_glob_meas, t + tables.c_delay[s],
+                  qsm_reply_time[:, 0]))
+
+    # ---------------- CLASSICAL ----------------
+    r_outcome, r_rx_basis, r_det = unpack_classical(pool.a2)
+    my_bit, my_basis, my_fresh = store_read(local_store, s, p)
+    sift = m_class & (r_det == 1) & (r_rx_basis == my_basis)
+    stale = stale + jnp.sum(jnp.where(m_class & ~my_fresh, 1, 0))
+    err = sift & (r_outcome != my_bit)
+    # additive uint32 fold (commutative+associative -> scatter-add safe even
+    # with several CLASSICALs for one session in a single wave)
+    key_contrib = jnp.where(sift, rng.mix32((p << 1) | r_outcome,
+                                            rng.SALT_BIT), jnp.uint32(0))
+    sess = sess._replace(
+        sifted=sess.sifted.at[s].add(jnp.where(sift, 1, 0)),
+        errors=sess.errors.at[s].add(jnp.where(err, 1, 0)),
+        key_hash=sess.key_hash.at[s].add(key_contrib),
+    )
+
+    # merge staged slot B (an event slot can be EMIT or ARRIVE, not both)
+    stage_b = Staged(
+        time=jnp.where(m_emit, stage_b_emit.time, stage_b_classical.time),
+        kind=jnp.where(m_emit, stage_b_emit.kind, stage_b_classical.kind),
+        dst=jnp.where(m_emit, stage_b_emit.dst, stage_b_classical.dst),
+        a0=jnp.where(m_emit, stage_b_emit.a0, stage_b_classical.a0),
+        a1=jnp.where(m_emit, stage_b_emit.a1, stage_b_classical.a1),
+        a2=jnp.where(m_emit, stage_b_emit.a2, stage_b_classical.a2),
+        valid=stage_b_emit.valid | stage_b_classical.valid,
+    )
+    staged = Staged(*[jnp.concatenate([a, b]) for a, b in
+                      zip(stage_a, stage_b)])
+    return HandlerOut(staged, sess, local_store,
+                      flat(qsm_op), flat(qsm_session), flat(qsm_photon),
+                      flat(qsm_payload), flat(qsm_reply_time), stale)

@@ -1,0 +1,136 @@
+"""Global quantum state manager — the two designs under study.
+
+``gathered`` (paper-faithful): one logical QSM server owns every cross-shard
+state.  Requests are batched per epoch and all-gathered; every shard applies
+the full write set to a replicated mirror and computes every measurement
+(SPMD), but the *cost model* bills the whole batch to the single server —
+reproducing the fan-in bottleneck of SeQUeNCe's TCP/socket server (the
+Python server in the paper's runs).
+
+``hashed`` (beyond-paper, the paper §IV proposal "eliminate the separate
+global QSM"): state ownership is hash-partitioned across shards; requests
+and replies are routed with all_to_all.  Server work and traffic scale as
+1/n_shards instead of accumulating on one host.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import rng
+from repro.core.buffering import route_records
+from repro.core.qkd import PHOTON_BITS, StaticTables, pack_classical, \
+    store_read, store_write
+from repro.core.types import (
+    KIND_CLASSICAL, QSM_MEASURE, QSM_WRITE, QsmStore, Staged,
+)
+
+GATHERED = "gathered"
+HASHED = "hashed"
+
+
+class QsmPhaseOut(NamedTuple):
+    global_store: QsmStore
+    replies: Staged          # locally-addressed reply events (insert into pool)
+    n_requests: jnp.ndarray  # requests issued by this shard this epoch
+    server_load: jnp.ndarray  # requests the billed server processes
+    stale: jnp.ndarray
+    dropped: jnp.ndarray
+
+
+def _measure(store: QsmStore, session, photon, rx_basis):
+    bit, basis, fresh = store_read(store, session, photon)
+    uid = (session << PHOTON_BITS) | photon
+    flip = rng.rand_bit(uid, rng.SALT_FLIP)
+    outcome = jnp.where(rx_basis == basis, bit, flip)
+    return outcome, fresh
+
+
+def _reply_staged(mask, session, photon, outcome, rx_basis, reply_time,
+                  tables: StaticTables):
+    n = mask.shape[0]
+    s = jnp.clip(session, 0, tables.n_sessions - 1)
+    return Staged(
+        time=reply_time,
+        kind=jnp.full((n,), KIND_CLASSICAL, jnp.int32),
+        dst=tables.src[s],
+        a0=s,
+        a1=photon,
+        a2=pack_classical(outcome, rx_basis, jnp.ones((n,), jnp.int32)),
+        valid=mask,
+    )
+
+
+def qsm_phase(
+    op, session, photon, payload, reply_time, count,
+    global_store: QsmStore,
+    tables: StaticTables,
+    router_owner: jnp.ndarray,
+    mode: str,
+    n_shards: int,
+    axis_name: str,
+    route_cap: int,
+):
+    """Process this epoch's batched QSM requests. Inputs are [qcap] arrays."""
+    me = lax.axis_index(axis_name)
+    n_requests = count
+
+    if mode == GATHERED:
+        gat = lambda x: lax.all_gather(x, axis_name).reshape(
+            (n_shards * x.shape[0],) + x.shape[1:])
+        op_g, s_g, p_g, pay_g, rt_g = map(
+            gat, (op, session, photon, payload, reply_time))
+
+        wmask = op_g == QSM_WRITE
+        global_store = store_write(
+            global_store, s_g, p_g, pay_g & 1, (pay_g >> 1) & 1, wmask)
+
+        mmask = op_g == QSM_MEASURE
+        rx = pay_g & 1
+        outcome, fresh = _measure(global_store, s_g, p_g, rx)
+        stale = jnp.sum(jnp.where(mmask & ~fresh, 1, 0))
+
+        dest = router_owner[jnp.clip(tables.src[jnp.clip(
+            s_g, 0, tables.n_sessions - 1)], 0, tables.n_routers - 1)]
+        mine = mmask & (dest == me)
+        replies = _reply_staged(mine, s_g, p_g, outcome, rx, rt_g, tables)
+        server_load = lax.psum(count, axis_name)  # whole batch on one server
+        return QsmPhaseOut(global_store, replies, n_requests, server_load,
+                           stale, jnp.int32(0))
+
+    # ---------------- hashed mode ----------------
+    owner = session % n_shards
+    valid = op != 0
+    fields = dict(op=op, session=session, photon=photon, payload=payload,
+                  reply_time=reply_time)
+    recv, rv, _, drop1 = route_records(fields, owner, valid, n_shards,
+                                       route_cap, axis_name)
+
+    r_op = jnp.where(rv, recv["op"], 0)
+    wmask = r_op == QSM_WRITE
+    global_store = store_write(global_store, recv["session"], recv["photon"],
+                               recv["payload"] & 1,
+                               (recv["payload"] >> 1) & 1, wmask)
+    mmask = r_op == QSM_MEASURE
+    rx = recv["payload"] & 1
+    outcome, fresh = _measure(global_store, recv["session"], recv["photon"],
+                              rx)
+    stale = jnp.sum(jnp.where(mmask & ~fresh, 1, 0))
+
+    # route replies to the shard owning the sender router
+    s_c = jnp.clip(recv["session"], 0, tables.n_sessions - 1)
+    rdest = router_owner[jnp.clip(tables.src[s_c], 0, tables.n_routers - 1)]
+    reply_fields = dict(
+        session=recv["session"], photon=recv["photon"],
+        outcome=outcome, rx=rx, reply_time=recv["reply_time"])
+    rrecv, rrv, _, drop2 = route_records(reply_fields, rdest, mmask,
+                                         n_shards, route_cap, axis_name)
+    replies = _reply_staged(rrv, rrecv["session"], rrecv["photon"],
+                            rrecv["outcome"], rrecv["rx"],
+                            rrecv["reply_time"], tables)
+    server_load = jnp.sum(mmask.astype(jnp.int32) +
+                          wmask.astype(jnp.int32))  # my partition only
+    return QsmPhaseOut(global_store, replies, n_requests, server_load,
+                       stale, drop1 + drop2)

@@ -1,0 +1,54 @@
+"""Counter-based deterministic RNG for event-level randomness.
+
+Every random decision in the simulator (photon bit, preparation basis,
+measurement basis, loss, tie-breaks) is a pure function of a globally unique
+event identifier ``uid`` plus a per-purpose ``salt``.  This makes simulation
+results bit-identical for ANY shard count and ANY partitioning — the
+serial-equivalence guarantee a conservative PDES promises (and the property
+our tests pin down).
+
+We use a splitmix32-style integer mixer rather than threefry keys so the same
+code runs unchanged inside Pallas kernel bodies (pure uint32 arithmetic, no
+PRNG key plumbing) and is cheap on the VPU.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Distinct salts per random purpose (arbitrary odd constants).  Kept as
+# Python ints so Pallas kernel bodies see literals, not captured tracers.
+SALT_BIT = 0x9E3779B1
+SALT_TX_BASIS = 0x85EBCA77
+SALT_RX_BASIS = 0xC2B2AE3D
+SALT_LOSS = 0x27D4EB2F
+SALT_FLIP = 0x165667B1
+
+
+def mix32(x: jnp.ndarray, salt) -> jnp.ndarray:
+    """splitmix32 finalizer over (x + salt); returns uniform uint32."""
+    z = x.astype(jnp.uint32) + jnp.uint32(salt)
+    z = (z ^ (z >> 16)) * jnp.uint32(0x85EBCA6B)
+    z = (z ^ (z >> 13)) * jnp.uint32(0xC2B2AE35)
+    z = z ^ (z >> 16)
+    # one extra round for avalanche on small sequential inputs
+    z = (z + jnp.uint32(0x9E3779B9))
+    z = (z ^ (z >> 15)) * jnp.uint32(0x2C1B3C6D)
+    z = (z ^ (z >> 12)) * jnp.uint32(0x297A2D39)
+    z = z ^ (z >> 15)
+    return z
+
+
+def uniform01(x: jnp.ndarray, salt) -> jnp.ndarray:
+    """Uniform float32 in [0, 1) derived from mix32."""
+    u = mix32(x, salt)
+    return (u >> 8).astype(jnp.float32) * jnp.float32(1.0 / (1 << 24))
+
+
+def rand_bit(x: jnp.ndarray, salt) -> jnp.ndarray:
+    """Uniform bit in {0, 1} (int32)."""
+    return (mix32(x, salt) & jnp.uint32(1)).astype(jnp.int32)
+
+
+def bernoulli(x: jnp.ndarray, salt, p) -> jnp.ndarray:
+    """Bernoulli(p) as bool, deterministic in (x, salt)."""
+    return uniform01(x, salt) < p

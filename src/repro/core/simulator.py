@@ -1,0 +1,262 @@
+"""Public simulator API: build state from a Network + partition, run epochs.
+
+Execution modes:
+  * ``vmap``  — S logical shards on one device (vmap(axis_name=...)); used
+    for CPU tests/benchmarks.  Collective semantics are identical to the
+    mesh path (same code, same axis primitives).
+  * ``shard_map`` — S real mesh devices; used by the dry-run and on TPU.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import events as ev
+from repro.core.qkd import MAX_PHOTONS, StaticTables
+from repro.core.timeline import EngineConfig, run_epochs_scan
+from repro.core.topology import Network, session_arrays
+from repro.core.types import (
+    KIND_EMIT, TIME_MAX, EventPool, Metrics, QsmStore, SessionState,
+    ShardState,
+)
+
+
+@dataclasses.dataclass
+class SimResults:
+    emitted: np.ndarray
+    detected: np.ndarray
+    sifted: np.ndarray
+    errors: np.ndarray
+    key_hash: np.ndarray
+    n_epochs: int
+    metrics: Metrics          # stacked (S, n_epochs, ...) numpy pytree
+    overflow: int
+    stale_reads: int
+    steals: list = dataclasses.field(default_factory=list)
+
+    @property
+    def qber(self) -> float:
+        tot = self.sifted.sum()
+        return float(self.errors.sum() / tot) if tot else 0.0
+
+    def fingerprint(self) -> int:
+        """Order-independent digest of the full simulation outcome."""
+        with np.errstate(over="ignore"):
+            h = np.uint64(0)
+            for a in (self.emitted, self.detected, self.sifted, self.errors,
+                      self.key_hash.astype(np.int64)):
+                h = h * np.uint64(1099511628211) ^ np.uint64(
+                    np.bitwise_xor.reduce(a.astype(np.uint64) + np.uint64(1)))
+            return int(h)
+
+
+def make_tables(net: Network) -> StaticTables:
+    arr = session_arrays(net)
+    assert len(net.sessions) > 0
+    assert int(arr["n_photons"].max()) < MAX_PHOTONS
+    return StaticTables(
+        src=jnp.asarray(arr["src"]), dst=jnp.asarray(arr["dst"]),
+        n_photons=jnp.asarray(arr["n_photons"]),
+        period=jnp.asarray(arr["period"]),
+        q_delay=jnp.asarray(arr["q_delay"]),
+        c_delay=jnp.asarray(arr["c_delay"]),
+        loss_p=jnp.asarray(arr["loss_p"]),
+        start=jnp.asarray(arr["start"]),
+        n_routers=net.n_routers,
+        n_sessions=len(net.sessions),
+    )
+
+
+def auto_window(net: Network, margin: int = 8) -> int:
+    """QSM window must cover the in-flight photon span of every session:
+    a sender keeps emitting every `period` while the round trip
+    (q_delay + c_delay) is outstanding, so the record for photon p must
+    survive (q+c)/period subsequent writes."""
+    arr = session_arrays(net)
+    span = (arr["q_delay"].astype(np.int64) + arr["c_delay"]) \
+        // np.maximum(arr["period"], 1) + margin
+    w = int(span.max())
+    return 1 << (w - 1).bit_length()  # next power of two
+
+
+def auto_lookahead(net: Network, part: np.ndarray,
+                   floor_ns: int = 1) -> int:
+    """Min delay of any event that can cross shards (quantum & classical)."""
+    arr = session_arrays(net)
+    cross = part[arr["src"]] != part[arr["dst"]]
+    if not cross.any():
+        return int(TIME_MAX)
+    return max(int(min(arr["q_delay"][cross].min(),
+                       arr["c_delay"][cross].min())), floor_ns)
+
+
+def build_state(net: Network, part: np.ndarray, cfg: EngineConfig,
+                qsm_window: int = 128) -> ShardState:
+    """Initial (S, ...) stacked per-shard state with one EMIT per session."""
+    S = cfg.n_shards
+    arr = session_arrays(net)
+    n_sessions = len(net.sessions)
+    cap = cfg.pool_cap
+
+    time = np.full((S, cap), TIME_MAX, np.int32)
+    kind = np.full((S, cap), -1, np.int32)
+    dst = np.full((S, cap), -1, np.int32)
+    a0 = np.full((S, cap), -1, np.int32)
+    a1 = np.full((S, cap), -1, np.int32)
+    a2 = np.zeros((S, cap), np.int32)
+    valid = np.zeros((S, cap), bool)
+
+    fill = np.zeros(S, np.int32)
+    for s in range(n_sessions):
+        owner = int(part[arr["src"][s]])
+        i = fill[owner]
+        if i >= cap:
+            raise ValueError("pool_cap too small for initial events")
+        time[owner, i] = arr["start"][s]
+        kind[owner, i] = KIND_EMIT
+        dst[owner, i] = arr["src"][s]
+        a0[owner, i] = s
+        a1[owner, i] = 0
+        valid[owner, i] = True
+        fill[owner] += 1
+
+    pool = EventPool(
+        time=jnp.asarray(time), kind=jnp.asarray(kind), dst=jnp.asarray(dst),
+        a0=jnp.asarray(a0), a1=jnp.asarray(a1), a2=jnp.asarray(a2),
+        valid=jnp.asarray(valid))
+
+    zs = lambda dt: jnp.zeros((S, n_sessions), dt)
+    sess = SessionState(
+        emitted=zs(jnp.int32), detected=zs(jnp.int32), sifted=zs(jnp.int32),
+        errors=zs(jnp.int32), key_hash=zs(jnp.uint32),
+        done=zs(bool))
+
+    def store():
+        return QsmStore(
+            bit=jnp.zeros((S, n_sessions, qsm_window), jnp.int32),
+            basis=jnp.zeros((S, n_sessions, qsm_window), jnp.int32),
+            stamp=jnp.full((S, n_sessions, qsm_window), -1, jnp.int32))
+
+    router_owner = jnp.broadcast_to(jnp.asarray(part, jnp.int32),
+                                    (S, net.n_routers))
+    session_owner = jnp.broadcast_to(
+        jnp.asarray(part[arr["src"]], jnp.int32), (S, n_sessions))
+    return ShardState(
+        pool=pool, sess=sess, local_store=store(), global_store=store(),
+        router_owner=router_owner, session_owner=session_owner,
+        overflow=jnp.zeros((S,), jnp.int32))
+
+
+class Simulator:
+    """Host-side driver around the jitted epoch scan."""
+
+    def __init__(self, net: Network, part: np.ndarray, cfg: EngineConfig,
+                 qsm_window: int | None = None,
+                 mesh: Optional[Mesh] = None):
+        assert cfg.n_shards == int(part.max()) + 1 or cfg.n_shards >= 1
+        self.net, self.part, self.cfg = net, np.asarray(part), cfg
+        self.tables = make_tables(net)
+        la = cfg.lookahead_ns or auto_lookahead(net, self.part)
+        self.lookahead = jnp.int32(min(la, int(TIME_MAX)))
+        qsm_window = qsm_window or auto_window(net)
+        self.state = build_state(net, self.part, cfg, qsm_window)
+        self.mesh = mesh
+        self._step = self._compile()
+
+    def _compile(self):
+        cfg, tables = self.cfg, self.tables
+
+        def chunk(state, lookahead, n_epochs):
+            return run_epochs_scan(state, tables, cfg, lookahead, n_epochs)
+
+        if self.mesh is None:
+            def stepper(state, lookahead, n_epochs: int):
+                f = jax.vmap(partial(chunk, n_epochs=n_epochs),
+                             axis_name=cfg.axis_name,
+                             in_axes=(0, None))
+                return f(state, lookahead)
+            return jax.jit(stepper, static_argnums=2)
+
+        mesh = self.mesh
+
+        def per_shard(state_blk, lookahead, n_epochs: int):
+            state = jax.tree.map(lambda x: x[0], state_blk)
+            state, m = chunk(state, lookahead, n_epochs)
+            expand = lambda x: x[None]
+            return jax.tree.map(expand, state), jax.tree.map(expand, m)
+
+        def stepper(state, lookahead, n_epochs: int):
+            f = jax.shard_map(
+                partial(per_shard, n_epochs=n_epochs), mesh=mesh,
+                in_specs=(P(cfg.axis_name), P()),
+                out_specs=(P(cfg.axis_name), P(cfg.axis_name)),
+                check_vma=False)
+            return f(state, lookahead)
+
+        return jax.jit(stepper, static_argnums=2)
+
+    def run(self, max_epochs: int = 100_000, chunk: int = 64,
+            steal_every: int = 0, steal_threshold: float = 1.15
+            ) -> SimResults:
+        """Run to completion.  steal_every > 0 enables work stealing every
+        `steal_every` chunks (chunk-boundary rebalancing, see
+        workstealing.py)."""
+        from repro.core import workstealing as ws
+
+        state = self.state
+        if self.mesh is not None:
+            sh = NamedSharding(self.mesh, P(self.cfg.axis_name))
+            state = jax.device_put(state, sh)
+        chunks = []
+        steals: list = []
+        total = 0
+        prev_emitted = np.asarray(state.sess.emitted).sum(0)
+        prev_detected = np.asarray(state.sess.detected).sum(0)
+        k = 0
+        while total < max_epochs:
+            state, m = self._step(state, self.lookahead, chunk)
+            total += chunk
+            k += 1
+            chunks.append(jax.tree.map(np.asarray, m))
+            if int(jnp.sum(state.pool.valid)) == 0:
+                break
+            if steal_every and k % steal_every == 0:
+                em = np.asarray(state.sess.emitted).sum(0)
+                det = np.asarray(state.sess.detected).sum(0)
+                load = ws.session_load(
+                    em - prev_emitted, det - prev_detected,
+                    np.asarray(self.tables.src), np.asarray(self.tables.dst),
+                    self.net.n_routers)
+                prev_emitted, prev_detected = em, det
+                owner = np.asarray(state.router_owner[0])
+                moves, new_owner = ws.plan_moves(
+                    load, owner, self.cfg.n_shards,
+                    threshold=steal_threshold)
+                if moves:
+                    state, rep = ws.apply_moves(state, self.tables,
+                                                new_owner)
+                    steals.append(rep)
+                    la = auto_lookahead(self.net, new_owner)
+                    self.lookahead = jnp.int32(min(la, int(TIME_MAX)))
+        self.state = state
+        metrics = jax.tree.map(
+            lambda *xs: np.concatenate(xs, axis=1), *chunks)
+        sess = jax.tree.map(np.asarray, state.sess)
+        res = SimResults(
+            emitted=sess.emitted.sum(0), detected=sess.detected.sum(0),
+            sifted=sess.sifted.sum(0), errors=sess.errors.sum(0),
+            key_hash=(sess.key_hash.astype(np.uint64).sum(0)
+                      & np.uint64(0xFFFFFFFF)).astype(np.uint32),
+            n_epochs=total, metrics=metrics,
+            overflow=int(np.asarray(state.overflow).sum()),
+            stale_reads=int(metrics.stale_reads.sum()),
+            steals=steals,
+        )
+        return res

@@ -1,0 +1,200 @@
+"""Conservative-PDES epoch loop, vectorized per shard.
+
+One epoch (mirrors parallel SeQUeNCe's synchronisation epochs):
+  1. lookahead sync: epoch_end = all-reduce-min(next event ts) + lookahead
+     (lookahead = min cross-shard channel delay, quantum AND classical —
+     guarantees any cross-shard event generated inside the epoch lands at or
+     after epoch_end, i.e. causality).
+  2. wave loop: repeatedly execute, in parallel, every in-window event whose
+     per-chain order allows it (EMIT chains: earliest per session;
+     ARRIVE/CLASSICAL commute).  Generated local events join the pool and
+     may themselves run later in the same epoch.  Cross-shard events are
+     staged in the outbox; cross-shard quantum-state ops are staged as QSM
+     requests (SeQUeNCe batches its socket requests the same way).
+  3. QSM phase: process the batched requests (gathered or hashed mode),
+     insert locally-addressed reply events.
+  4. outbox exchange: one all_to_all delivers cross-shard events.
+  5. instrumentation: per-shard counters for the cost model / Figs 3-7.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import events as ev
+from repro.core import qsm as qsm_mod
+from repro.core.buffering import append, route_records
+from repro.core.qkd import StaticTables, handle_all
+from repro.core.types import (
+    KIND_EMIT, N_KINDS, TIME_MAX, EventPool, Metrics, ShardState, Staged,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    n_shards: int
+    pool_cap: int = 4096
+    qsm_cap: int = 2048          # per-epoch QSM request staging
+    outbox_cap: int = 2048       # per-epoch cross-shard event staging
+    route_cap: int = 256         # per-destination all_to_all slots
+    lookahead_ns: int = 0        # 0 -> auto (min cross-shard delay)
+    qsm_mode: str = qsm_mod.GATHERED
+    axis_name: str = "shards"
+    max_waves: int = 100_000
+    burst_emit: bool = False     # beyond-paper: emit whole epoch window
+
+
+def _exec_mask(pool: EventPool, epoch_end, n_sessions: int):
+    """Which events may run this wave (causal per-chain gating)."""
+    in_win = pool.valid & (pool.time < epoch_end)
+    m_emit = in_win & (pool.kind == KIND_EMIT)
+    # EMIT chains: at most one live EMIT per session exists (each EMIT
+    # schedules its successor), so the per-session min gate is exact.
+    s = jnp.clip(pool.a0, 0, n_sessions - 1)
+    seg = jnp.full((n_sessions,), TIME_MAX, jnp.int32).at[s].min(
+        jnp.where(m_emit, pool.time, TIME_MAX))
+    emit_ok = m_emit & (pool.time <= seg[s])
+    return in_win & ((pool.kind != KIND_EMIT) | emit_ok), in_win
+
+
+def run_epoch(
+    state: ShardState,
+    tables: StaticTables,
+    cfg: EngineConfig,
+    lookahead: jnp.ndarray,
+) -> Tuple[ShardState, Metrics]:
+    axis = cfg.axis_name
+    n_shards = cfg.n_shards
+    me = lax.axis_index(axis)
+
+    # ---- 1. lookahead synchronization ----
+    nt = ev.next_time(state.pool)
+    global_next = lax.pmin(nt, axis)
+    # saturating add: TIME_MAX stays TIME_MAX
+    epoch_end = global_next + jnp.minimum(lookahead, TIME_MAX - global_next)
+
+    qcap, ocap = cfg.qsm_cap, cfg.outbox_cap
+    qsm_buf = dict(
+        op=jnp.zeros((qcap,), jnp.int32),
+        session=jnp.zeros((qcap,), jnp.int32),
+        photon=jnp.zeros((qcap,), jnp.int32),
+        payload=jnp.zeros((qcap,), jnp.int32),
+        reply_time=jnp.zeros((qcap,), jnp.int32),
+    )
+    outbox = ev.empty_staged(ocap)
+
+    def wave_cond(carry):
+        (pool, *_rest), counters = carry
+        _, in_win = _exec_mask(pool, epoch_end, tables.n_sessions)
+        return jnp.any(in_win) & (counters["waves"] < cfg.max_waves)
+
+    burst = 8 if cfg.burst_emit else 1
+
+    def wave_body(carry):
+        (pool, sess, lstore, qbuf, qcount, obox, ocount), c = carry
+        exec_mask, _ = _exec_mask(pool, epoch_end, tables.n_sessions)
+        out = handle_all(pool, exec_mask, sess, lstore,
+                         state.router_owner, tables, burst=burst)
+        kind_before = pool.kind
+        pool = ev.invalidate(pool, exec_mask)
+
+        # split staged events into local-destination vs cross-shard
+        dest = state.router_owner[
+            jnp.clip(out.staged.dst, 0, tables.n_routers - 1)]
+        local_valid = out.staged.valid & (dest == me)
+        remote_valid = out.staged.valid & (dest != me)
+        pool, d1 = ev.insert(pool, out.staged._replace(valid=local_valid))
+        obox, ocount, d2 = append(
+            obox._replace(valid=obox.valid),
+            ocount,
+            out.staged._replace(valid=remote_valid),
+            remote_valid, ocap)
+        # NOTE: append writes all fields incl. `valid`; patch it to be the
+        # occupancy mask of the buffer.
+        obox = obox._replace(
+            valid=(jnp.arange(ocap) < ocount))
+
+        qreq_valid = out.qsm_op != 0
+        qnew = dict(op=out.qsm_op,
+                    session=jnp.clip(out.qsm_session, 0,
+                                     tables.n_sessions - 1),
+                    photon=jnp.clip(out.qsm_photon, 0, 1 << 16),
+                    payload=out.qsm_payload,
+                    reply_time=out.qsm_reply_time)
+        qbuf, qcount, d3 = append(qbuf, qcount, qnew, qreq_valid, qcap)
+
+        kinds = jax.nn.one_hot(
+            jnp.clip(kind_before, 0, N_KINDS - 1), N_KINDS, dtype=jnp.int32)
+        c = dict(
+            waves=c["waves"] + 1,
+            events=c["events"] + jnp.sum(
+                jnp.where(exec_mask[:, None], kinds, 0), axis=0),
+            dropped=c["dropped"] + d1 + d2 + d3,
+            stale=c["stale"] + out.stale,
+            pool_high=jnp.maximum(c["pool_high"], ev.occupancy(pool)),
+        )
+        return (pool, out.sess, out.local_store, qbuf, qcount, obox,
+                ocount), c
+
+    counters0 = dict(
+        waves=jnp.int32(0),
+        events=jnp.zeros((N_KINDS,), jnp.int32),
+        dropped=jnp.int32(0),
+        stale=jnp.int32(0),
+        pool_high=ev.occupancy(state.pool),
+    )
+    carry0 = ((state.pool, state.sess, state.local_store, qsm_buf,
+               jnp.int32(0), outbox, jnp.int32(0)), counters0)
+    (pool, sess, lstore, qbuf, qcount, obox, ocount), counters = \
+        lax.while_loop(wave_cond, wave_body, carry0)
+
+    # ---- 3. QSM phase ----
+    qout = qsm_mod.qsm_phase(
+        qbuf["op"], qbuf["session"], qbuf["photon"], qbuf["payload"],
+        qbuf["reply_time"], qcount, state.global_store, tables,
+        state.router_owner, cfg.qsm_mode, n_shards, axis, cfg.route_cap)
+    pool, d4 = ev.insert(pool, qout.replies)
+
+    # ---- 4. outbox exchange ----
+    ob_fields = dict(time=obox.time, kind=obox.kind, dst=obox.dst,
+                     a0=obox.a0, a1=obox.a1, a2=obox.a2)
+    ob_dest = state.router_owner[jnp.clip(obox.dst, 0,
+                                          tables.n_routers - 1)]
+    recv, rvalid, n_sent, d5 = route_records(
+        ob_fields, ob_dest, obox.valid, n_shards, cfg.route_cap, axis)
+    incoming = Staged(time=recv["time"], kind=recv["kind"], dst=recv["dst"],
+                      a0=recv["a0"], a1=recv["a1"], a2=recv["a2"],
+                      valid=rvalid)
+    pool, d6 = ev.insert(pool, incoming)
+
+    new_state = state._replace(
+        pool=pool, sess=sess, local_store=lstore,
+        global_store=qout.global_store,
+        overflow=state.overflow + counters["dropped"] + qout.dropped
+        + d4 + d5 + d6,
+    )
+    metrics = Metrics(
+        events_by_kind=counters["events"],
+        n_waves=counters["waves"],
+        outbox_sent=n_sent,
+        qsm_requests=qout.n_requests,
+        epoch_end=epoch_end,
+        pool_high=counters["pool_high"],
+        stale_reads=counters["stale"] + qout.stale,
+    )
+    return new_state, metrics
+
+
+def run_epochs_scan(state: ShardState, tables: StaticTables,
+                    cfg: EngineConfig, lookahead, n_epochs: int):
+    """lax.scan over `n_epochs` epochs; returns stacked per-epoch Metrics."""
+
+    def step(st, _):
+        return run_epoch(st, tables, cfg, lookahead)
+
+    return lax.scan(step, state, xs=None, length=n_epochs)

@@ -1,0 +1,172 @@
+"""Topology + workload generators (host side, numpy/networkx).
+
+Reproduces the paper's two experiment setups:
+  * linear — 1024 routers in a chain, QKD sessions between adjacent pairs
+    (trusted-node relay), evenly distributed workload (paper obs. #3).
+  * autonomous-system (AS) — hub-and-spoke ASes joined by a core mesh, a
+    "more varied workload spread across the network" with hub hotspots,
+    which is what produces the straggler pathology of Figs 4–7.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Channel:
+    u: int
+    v: int
+    delay_ns: int  # quantum propagation delay
+
+
+@dataclasses.dataclass(frozen=True)
+class Session:
+    """One QKD session: src prepares photons, dst measures them."""
+
+    src: int
+    dst: int
+    n_photons: int
+    period_ns: int
+    q_delay_ns: int   # quantum channel propagation delay src->dst
+    c_delay_ns: int   # classical channel delay dst->src (> quantum, obs. #4)
+    loss_p: float     # photon loss probability
+    start_ns: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class Network:
+    n_routers: int
+    channels: List[Channel]
+    sessions: List[Session]
+    name: str = "net"
+
+    def adjacency(self) -> np.ndarray:
+        a = np.zeros((self.n_routers, self.n_routers), dtype=bool)
+        for c in self.channels:
+            a[c.u, c.v] = a[c.v, c.u] = True
+        return a
+
+
+# ---------------------------------------------------------------------------
+# Linear topology (paper §III-B)
+# ---------------------------------------------------------------------------
+def linear_network(
+    n_routers: int = 1024,
+    n_photons: int = 256,
+    period_ns: int = 1_000,
+    hop_delay_ns: int = 25_000,
+    classical_mult: float = 2.0,
+    loss_p: float = 0.1,
+) -> Network:
+    channels = [
+        Channel(i, i + 1, hop_delay_ns) for i in range(n_routers - 1)
+    ]
+    sessions = [
+        Session(
+            src=i, dst=i + 1, n_photons=n_photons, period_ns=period_ns,
+            q_delay_ns=hop_delay_ns,
+            c_delay_ns=int(hop_delay_ns * classical_mult),
+            loss_p=loss_p,
+        )
+        for i in range(n_routers - 1)
+    ]
+    return Network(n_routers, channels, sessions, name="linear")
+
+
+# ---------------------------------------------------------------------------
+# Autonomous-system topology (paper §III-C)
+# ---------------------------------------------------------------------------
+def as_network(
+    n_routers: int = 1024,
+    n_as: int = 32,
+    seed: int = 0,
+    n_photons: int = 256,
+    period_ns: int = 1_000,
+    hop_delay_ns: int = 25_000,
+    core_delay_ns: int = 50_000,
+    classical_mult: float = 2.0,
+    loss_p: float = 0.1,
+    hotspot_frac: float = 0.25,
+    hotspot_boost: int = 6,
+) -> Network:
+    """AS graph: `n_as` hub-and-spoke clusters; hubs form a ring + chords.
+
+    Sessions run between random leaf pairs, with a `hotspot_frac` subset of
+    ASes receiving `hotspot_boost`x as many sessions — the imbalance that
+    reproduces the paper's straggler (Fig 7: one process dominates).
+    """
+    rng = np.random.default_rng(seed)
+    sizes = rng.dirichlet(np.ones(n_as) * 4.0) * (n_routers - n_as)
+    sizes = np.maximum(sizes.astype(int), 1)
+    while sizes.sum() < n_routers - n_as:
+        sizes[rng.integers(n_as)] += 1
+    while sizes.sum() > n_routers - n_as:
+        sizes[np.argmax(sizes)] -= 1
+
+    channels: List[Channel] = []
+    hubs: List[int] = []
+    members: List[List[int]] = []
+    nxt = 0
+    for a in range(n_as):
+        hub = nxt
+        hubs.append(hub)
+        leaf_lo = nxt + 1
+        leaves = list(range(leaf_lo, leaf_lo + sizes[a]))
+        members.append([hub] + leaves)
+        for leaf in leaves:
+            channels.append(Channel(hub, leaf, hop_delay_ns))
+        nxt = leaf_lo + sizes[a]
+    assert nxt == n_routers, (nxt, n_routers)
+
+    # core: ring over hubs + random chords
+    for a in range(n_as):
+        channels.append(Channel(hubs[a], hubs[(a + 1) % n_as], core_delay_ns))
+    for _ in range(n_as // 2):
+        a, b = rng.choice(n_as, size=2, replace=False)
+        channels.append(Channel(hubs[a], hubs[b], core_delay_ns))
+
+    # sessions: leaf -> leaf inside an AS, through-hub pairs across ASes
+    hot = set(rng.choice(n_as, size=max(1, int(n_as * hotspot_frac)),
+                         replace=False).tolist())
+    sessions: List[Session] = []
+    for a in range(n_as):
+        weight = hotspot_boost if a in hot else 1
+        leaves = members[a][1:] or members[a]
+        for _ in range(weight * max(1, len(leaves) // 2)):
+            if len(leaves) >= 2 and rng.random() < 0.7:
+                # intra-AS session (leaf-hub-leaf, 2 hops)
+                u, v = rng.choice(leaves, size=2, replace=False)
+                qd = 2 * hop_delay_ns
+            else:
+                # inter-AS session via the core (leaf-hub-core-hub-leaf)
+                b = int(rng.integers(n_as))
+                other = members[b][1:] or members[b]
+                u = int(rng.choice(leaves))
+                v = int(rng.choice(other))
+                if u == v:
+                    continue
+                qd = 2 * hop_delay_ns + core_delay_ns
+            sessions.append(Session(
+                src=int(u), dst=int(v), n_photons=n_photons,
+                period_ns=period_ns, q_delay_ns=qd,
+                c_delay_ns=int(qd * classical_mult), loss_p=loss_p,
+            ))
+    return Network(n_routers, channels, sessions, name="as")
+
+
+def session_arrays(net: Network) -> dict:
+    """Static per-session parameter table as numpy arrays."""
+    s = net.sessions
+    return dict(
+        src=np.array([x.src for x in s], np.int32),
+        dst=np.array([x.dst for x in s], np.int32),
+        n_photons=np.array([x.n_photons for x in s], np.int32),
+        period=np.array([x.period_ns for x in s], np.int32),
+        q_delay=np.array([x.q_delay_ns for x in s], np.int32),
+        c_delay=np.array([x.c_delay_ns for x in s], np.int32),
+        loss_p=np.array([x.loss_p for x in s], np.float32),
+        start=np.array([x.start_ns for x in s], np.int32),
+    )

@@ -1,0 +1,135 @@
+"""Core datatypes for the PDES engine.
+
+All device state is struct-of-arrays NamedTuples (automatic pytrees) with
+int32 fields; timestamps are int32 nanoseconds (exact ordering, TPU-friendly,
+no global x64 flag).  Horizon guard: events may not be scheduled beyond
+2**30 ns of sim time (~1.07 s) — QKD workloads run in the µs–ms regime.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Event kinds
+# ---------------------------------------------------------------------------
+KIND_NULL = -1
+KIND_EMIT = 0       # sender: prepare photon, schedule ARRIVE + next EMIT
+KIND_ARRIVE = 1     # receiver: loss + measurement (or global-QSM request)
+KIND_CLASSICAL = 2  # sender: basis reconciliation -> sifted key bit
+N_KINDS = 3
+
+TIME_MAX = np.int32(2**30)  # "infinity" / horizon guard
+
+# QSM request ops
+QSM_NOP = 0
+QSM_WRITE = 1    # store (bit, tx_basis) for (session, photon)
+QSM_MEASURE = 2  # measure (session, photon) in rx_basis -> classical reply
+
+
+class EventPool(NamedTuple):
+    """Fixed-capacity struct-of-arrays event pool (one per shard)."""
+
+    time: jnp.ndarray   # int32[cap] ns
+    kind: jnp.ndarray   # int32[cap]
+    dst: jnp.ndarray    # int32[cap] global router id that executes the event
+    a0: jnp.ndarray     # int32[cap] session id
+    a1: jnp.ndarray     # int32[cap] photon index
+    a2: jnp.ndarray     # int32[cap] packed payload (CLASSICAL: bit0 outcome,
+                        #   bit1 rx_basis, bit2 detected)
+    valid: jnp.ndarray  # bool[cap]
+
+    @property
+    def capacity(self) -> int:
+        return self.time.shape[-1]
+
+
+class Staged(NamedTuple):
+    """Events produced by handlers during a wave, before pool insertion."""
+
+    time: jnp.ndarray
+    kind: jnp.ndarray
+    dst: jnp.ndarray
+    a0: jnp.ndarray
+    a1: jnp.ndarray
+    a2: jnp.ndarray
+    valid: jnp.ndarray
+
+
+class QsmRequests(NamedTuple):
+    """Per-epoch staging buffer of global-QSM requests (one per shard)."""
+
+    op: jnp.ndarray        # int32[qcap] QSM_{NOP,WRITE,MEASURE}
+    session: jnp.ndarray   # int32[qcap]
+    photon: jnp.ndarray    # int32[qcap]
+    payload: jnp.ndarray   # int32[qcap] WRITE: bit0 bit, bit1 tx_basis
+                           #             MEASURE: bit0 rx_basis
+    reply_time: jnp.ndarray  # int32[qcap] timestamp for the reply event
+    count: jnp.ndarray     # int32[] number of live requests
+    overflow: jnp.ndarray  # int32[] dropped requests (bug indicator)
+
+
+class SessionState(NamedTuple):
+    """Per-QKD-session dynamic state.
+
+    Arrays are GLOBALLY indexed [n_sessions] and replicated in shape; each
+    shard only writes rows it owns (rows for foreign sessions hold zeros).
+    This makes work-stealing migration a psum + remask (see workstealing.py)
+    at the cost of O(total sessions) replication — acceptable for 1e3–1e5
+    sessions; shard it for larger (documented in DESIGN.md §5).
+    """
+
+    emitted: jnp.ndarray   # int32[S_n] photons emitted so far
+    detected: jnp.ndarray  # int32[S_n] photons detected at receiver
+    sifted: jnp.ndarray    # int32[S_n] sifted key bits (bases matched)
+    errors: jnp.ndarray    # int32[S_n] sifted bits that disagree (QBER num.)
+    key_hash: jnp.ndarray  # uint32[S_n] XOR-accumulated fingerprint of the
+                           #   sifted key (order-independent -> deterministic
+                           #   under wave batching); equivalence-test anchor
+    done: jnp.ndarray      # bool[S_n] all photons emitted
+
+
+class QsmStore(NamedTuple):
+    """Quantum state manager store: (bit, tx_basis) per in-flight photon.
+
+    Rows [n_sessions, window] — a circular window over photon indices.
+    LOCAL sessions (both endpoints on one shard) are written in-wave.
+    GLOBAL sessions go through the request phase:
+      * gathered mode: every shard applies every write (replicated mirror of
+        the single-server store; cost model bills the server shard),
+      * hashed mode: row s is owned by shard hash(s) % n_shards.
+    """
+
+    bit: jnp.ndarray       # int32[S_n, W]
+    basis: jnp.ndarray     # int32[S_n, W]
+    stamp: jnp.ndarray     # int32[S_n, W] photon idx stored (slot-reuse guard)
+
+    @property
+    def window(self) -> int:
+        return self.bit.shape[-1]
+
+
+class Metrics(NamedTuple):
+    """Per-epoch instrumentation (per shard) — feeds Figs 3–7."""
+
+    events_by_kind: jnp.ndarray  # int32[N_KINDS]
+    n_waves: jnp.ndarray         # int32[]
+    outbox_sent: jnp.ndarray     # int32[]
+    qsm_requests: jnp.ndarray    # int32[]
+    epoch_end: jnp.ndarray       # int32[] ns
+    pool_high: jnp.ndarray       # int32[] pool occupancy high-water mark
+    stale_reads: jnp.ndarray     # int32[] QSM window-reuse misses (must be 0)
+
+
+class ShardState(NamedTuple):
+    """Complete per-shard simulator state (the shard_map/vmap carry)."""
+
+    pool: EventPool
+    sess: SessionState
+    local_store: QsmStore
+    global_store: QsmStore
+    router_owner: jnp.ndarray   # int32[n_routers] router -> shard
+    session_owner: jnp.ndarray  # int32[n_sessions] sender-side owner shard
+    overflow: jnp.ndarray       # int32[] pool insert overflow count

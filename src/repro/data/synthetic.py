@@ -1,0 +1,64 @@
+"""Deterministic synthetic token pipeline.
+
+Every batch is a pure function of (seed, step, shard) — restart/elastic
+resume is skip-ahead by construction (no iterator state to checkpoint), and
+different data shards never overlap.  A markov-chain generator gives the
+loss curve actual structure to learn (unlike uniform noise), which the
+end-to-end training example uses to show loss descent.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    kind: str = "markov"   # markov | uniform
+
+
+def _markov_tokens(key, shape, vocab):
+    """Order-1 markov chain with a banded transition structure."""
+    b, t = shape
+    k1, k2 = jax.random.split(key)
+    start = jax.random.randint(k1, (b,), 0, vocab, jnp.int32)
+    steps = jax.random.randint(k2, (b, t), 0, 17, jnp.int32) - 8
+
+    def step(tok, d):
+        nxt = jnp.abs(tok * 31 + d) % vocab
+        return nxt, nxt
+
+    _, toks = jax.lax.scan(step, start, steps.T)
+    return toks.T
+
+
+def make_batch(cfg: DataConfig, step: int):
+    """Global batch for `step` (host-side; sharded by the caller)."""
+    key = jax.random.fold_in(jax.random.key(cfg.seed), step)
+    shape = (cfg.global_batch, cfg.seq_len)
+    if cfg.kind == "markov":
+        toks = _markov_tokens(key, shape, cfg.vocab_size)
+    else:
+        toks = jax.random.randint(key, shape, 0, cfg.vocab_size, jnp.int32)
+    return {"tokens": toks}
+
+
+def make_shard_batch(cfg: DataConfig, step: int, shard: int, n_shards: int):
+    """Per-data-shard slice, disjoint across shards, skip-ahead capable."""
+    assert cfg.global_batch % n_shards == 0
+    per = cfg.global_batch // n_shards
+    key = jax.random.fold_in(
+        jax.random.fold_in(jax.random.key(cfg.seed), step), shard)
+    if cfg.kind == "markov":
+        toks = _markov_tokens(key, (per, cfg.seq_len), cfg.vocab_size)
+    else:
+        toks = jax.random.randint(key, (per, cfg.seq_len), 0,
+                                  cfg.vocab_size, jnp.int32)
+    return {"tokens": toks}

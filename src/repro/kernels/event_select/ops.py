@@ -1,0 +1,24 @@
+"""Public wrapper for epoch-window selection.
+
+On TPU the fused Pallas kernel keeps the pool resident in VMEM; elsewhere
+the XLA stable-sort oracle runs (identical results).  The wave scheduler in
+timeline.py uses mask/segment-min gating instead of a full sort — that IS
+the TPU adaptation (DESIGN.md §3) — so this op serves (a) the sorted-drain
+execution mode used by benchmarks to mimic SeQUeNCe's serial pop order, and
+(b) as the scheduler building block a strict-priority workload would use.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.event_select.kernel import event_select
+from repro.kernels.event_select.ref import event_select_ref
+
+
+def sorted_window(time, valid, epoch_end, *, use_kernel: bool = None,
+                  interpret: bool = False):
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    if use_kernel:
+        return event_select(time, valid, epoch_end, interpret=interpret)
+    return event_select_ref(time, valid, epoch_end)

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the event_select kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import TIME_MAX
+
+
+@jax.jit
+def event_select_ref(time, valid, epoch_end):
+    """Stable argsort of masked timestamps == lexicographic (ts, slot)."""
+    key = jnp.where(valid & (time < epoch_end), time, TIME_MAX)
+    order = jnp.argsort(key, stable=True).astype(jnp.int32)
+    count = jnp.sum((key != TIME_MAX).astype(jnp.int32))
+    return order, count

@@ -1,0 +1,124 @@
+"""Pallas TPU flash attention (forward) with GQA, causal + sliding window.
+
+Blocked online-softmax: grid (B, H, Tq/bq, Tk/bk); the innermost grid axis
+walks KV blocks ("arbitrary" semantics) accumulating into VMEM scratch
+(acc, running max m, running sum l).  Block shapes keep the MXU fed:
+(bq, d_head) x (d_head, bk) matmuls with bq = bk = 128 by default and
+d_head padded to a 128 multiple by the ops.py wrapper.
+
+VMEM per grid cell at bq=bk=128, D=128: q/k/v blocks 3*64 KiB + acc 64 KiB
++ m/l 2*64 KiB (broadcast across lanes, TPU-friendly layout) ~ 0.4 MiB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+try:  # TPU compiler params are optional (ignored in interpret mode)
+    from jax.experimental.pallas import tpu as pltpu
+    _SCRATCH = pltpu.VMEM
+    _COMPILER_PARAMS = dict(compiler_params=pltpu.CompilerParams(
+        dimension_semantics=("parallel", "parallel", "parallel",
+                             "arbitrary")))
+except Exception:  # pragma: no cover
+    pltpu = None
+    _SCRATCH = None
+    _COMPILER_PARAMS = {}
+
+NEG_INF = -1e30
+LANES = 128
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  sm_scale, causal, window, bq, bk, q_len, kv_len, grid_k):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * sm_scale
+
+    qpos = iq * bq + lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kpos = ik * bk + lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = (qpos < q_len) & (kpos < kv_len)
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[:, :1]
+    l_prev = l_ref[:, :1]
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    l_new = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(ik == grid_k - 1)
+    def _finish():
+        l = l_ref[:, :1]
+        l = jnp.where(l == 0.0, 1.0, l)  # fully-masked (padding) rows
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "sm_scale", "block_q", "block_k",
+                     "q_len", "kv_len", "interpret"))
+def flash_attention_padded(
+    q, k, v, *, sm_scale: float, causal: bool, window,
+    q_len: int, kv_len: int, block_q: int = 128, block_k: int = 128,
+    interpret: bool = False,
+):
+    """Core call; q (B,H,Tp,D), k/v (B,Hkv,Sp,D) with Tp%bq == Sp%bk == 0."""
+    B, H, Tp, D = q.shape
+    _, Hkv, Sp, _ = k.shape
+    assert H % Hkv == 0
+    group = H // Hkv
+    bq, bk = min(block_q, Tp), min(block_k, Sp)
+    grid = (B, H, Tp // bq, Sp // bk)
+
+    kern = functools.partial(
+        _flash_kernel, sm_scale=sm_scale, causal=causal, window=window,
+        bq=bq, bk=bk, q_len=q_len, kv_len=kv_len, grid_k=grid[3])
+
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, i, j, g=group: (b, h // g, j, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, i, j, g=group: (b, h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D),
+                               lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Tp, D), q.dtype),
+        scratch_shapes=[
+            _SCRATCH((bq, D), jnp.float32),
+            _SCRATCH((bq, LANES), jnp.float32),
+            _SCRATCH((bq, LANES), jnp.float32),
+        ],
+        interpret=interpret,
+        **(_COMPILER_PARAMS if not interpret else {}),
+    )(q, k, v)

@@ -1,0 +1,42 @@
+"""Public flash-attention wrapper: pads to block multiples, dispatches to
+the Pallas kernel on TPU or the dense oracle elsewhere."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_padded
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def _pad_axis(x, axis, mult):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window=None,
+                    sm_scale: float | None = None,
+                    block_q: int = 128, block_k: int = 128,
+                    use_kernel: bool = None, interpret: bool = False):
+    """q (B,H,T,D), k/v (B,Hkv,S,D) -> (B,H,T,D)."""
+    if sm_scale is None:
+        sm_scale = q.shape[-1] ** -0.5
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    if not use_kernel:
+        return attention_ref(q, k, v, sm_scale=sm_scale, causal=causal,
+                             window=window)
+    T, S = q.shape[2], k.shape[2]
+    qp = _pad_axis(q, 2, block_q)
+    kp = _pad_axis(k, 2, block_k)
+    vp = _pad_axis(v, 2, block_k)
+    out = flash_attention_padded(
+        qp, kp, vp, sm_scale=sm_scale, causal=causal, window=window,
+        q_len=T, kv_len=S, block_q=block_q, block_k=block_k,
+        interpret=interpret)
+    return out[:, :, :T, :]

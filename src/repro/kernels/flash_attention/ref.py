@@ -1,0 +1,32 @@
+"""Pure-jnp oracle: dense softmax attention with the same mask semantics."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "sm_scale"))
+def attention_ref(q, k, v, *, sm_scale: float, causal: bool = True,
+                  window=None):
+    """q (B,H,T,D), k/v (B,Hkv,S,D) -> (B,H,T,D); GQA via head repeat."""
+    B, H, T, D = q.shape
+    Hkv = k.shape[1]
+    if Hkv != H:
+        rep = H // Hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    s = jnp.einsum("bhtd,bhsd->bhts", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * sm_scale
+    qpos = jnp.arange(T)[:, None]
+    kpos = jnp.arange(k.shape[2])[None, :]
+    mask = jnp.ones((T, k.shape[2]), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhts,bhsd->bhtd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

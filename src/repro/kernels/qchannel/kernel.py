@@ -1,0 +1,60 @@
+"""Pallas TPU kernel: batched quantum-channel transmission + measurement.
+
+The paper's workload analysis (obs. #1) finds quantum-channel events
+dominant in both count and execution time — this is the PDES hot spot.  One
+kernel call processes a whole wave of photons: loss sampling, receiver basis
+choice, and BB84 measurement, all from the counter-based RNG (bit-exact with
+the pure-jnp oracle in ref.py since everything is integer math).
+
+Layout: photon batches are shaped (rows, 128) to match the VPU lane width;
+the grid tiles rows in blocks of BLOCK_ROWS (8-row multiples for sublanes).
+All five tensors for a block live in VMEM: 5 * BLOCK_ROWS * 128 * 4 B =
+1.3 MiB at BLOCK_ROWS=512 — comfortably inside the ~16 MiB VMEM budget.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import rng
+
+BLOCK_ROWS = 512
+LANES = 128
+
+
+def _qchannel_kernel(uid_ref, loss_ref, bit_ref, basis_ref,
+                     detected_ref, rx_basis_ref, outcome_ref):
+    uid = uid_ref[...]
+    loss_p = loss_ref[...]
+    bit = bit_ref[...]
+    basis = basis_ref[...]
+
+    detected = ~rng.bernoulli(uid, rng.SALT_LOSS, loss_p)
+    rx_basis = rng.rand_bit(uid, rng.SALT_RX_BASIS)
+    flip = rng.rand_bit(uid, rng.SALT_FLIP)
+    outcome = jnp.where(rx_basis == basis, bit, flip)
+
+    detected_ref[...] = detected.astype(jnp.int32)
+    rx_basis_ref[...] = rx_basis
+    outcome_ref[...] = outcome
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def qchannel_2d(uid, loss_p, bit, basis, *, interpret: bool = False):
+    """Core pallas_call on (rows, 128)-shaped inputs (rows % 8 == 0)."""
+    rows = uid.shape[0]
+    bm = min(BLOCK_ROWS, rows)
+    grid = (pl.cdiv(rows, bm),)
+    spec = pl.BlockSpec((bm, LANES), lambda i: (i, 0))
+    out_shape = [jax.ShapeDtypeStruct((rows, LANES), jnp.int32)] * 3
+    return pl.pallas_call(
+        _qchannel_kernel,
+        grid=grid,
+        in_specs=[spec] * 4,
+        out_specs=[spec] * 3,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(uid, loss_p, bit, basis)

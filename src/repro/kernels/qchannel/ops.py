@@ -1,0 +1,40 @@
+"""Jitted public wrapper: pads/reshapes flat photon batches to VPU tiles and
+dispatches to the Pallas kernel (TPU) or the jnp oracle (CPU/GPU).
+
+The PDES ARRIVE handler and the benchmarks call `transmit_measure`; on this
+CPU-only container the oracle path runs in production while the kernel is
+validated in interpret mode by tests/test_kernels.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.qchannel.kernel import LANES, qchannel_2d
+from repro.kernels.qchannel.ref import qchannel_ref
+
+
+def _pad_to_tiles(x, rows, fill):
+    n = x.shape[0]
+    pad = rows * LANES - n
+    return jnp.pad(x, (0, pad), constant_values=fill).reshape(rows, LANES)
+
+
+def transmit_measure(uid, loss_p, bit, basis, *, use_kernel: bool = None,
+                     interpret: bool = False):
+    """Flat [N] photon batch -> (detected, rx_basis, outcome) int32[N]."""
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    if not use_kernel:
+        return qchannel_ref(uid, loss_p, bit, basis)
+
+    n = uid.shape[0]
+    rows = max(8, -(-n // LANES))
+    rows += (-rows) % 8  # sublane multiple
+    u = _pad_to_tiles(uid.astype(jnp.uint32), rows, 0)
+    lp = _pad_to_tiles(loss_p.astype(jnp.float32), rows, 0.0)
+    b = _pad_to_tiles(bit.astype(jnp.int32), rows, 0)
+    ba = _pad_to_tiles(basis.astype(jnp.int32), rows, 0)
+    det, rx, out = qchannel_2d(u, lp, b, ba, interpret=interpret)
+    flat = lambda x: x.reshape(-1)[:n]
+    return flat(det), flat(rx), flat(out)

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the qchannel kernel (bit-exact, integer math)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import rng
+
+
+@jax.jit
+def qchannel_ref(uid, loss_p, bit, basis):
+    """uid uint32[N], loss_p float32[N], bit/basis int32[N] ->
+    (detected, rx_basis, outcome) int32[N]."""
+    detected = ~rng.bernoulli(uid, rng.SALT_LOSS, loss_p)
+    rx_basis = rng.rand_bit(uid, rng.SALT_RX_BASIS)
+    flip = rng.rand_bit(uid, rng.SALT_FLIP)
+    outcome = jnp.where(rx_basis == basis, bit, flip)
+    return detected.astype(jnp.int32), rx_basis, outcome

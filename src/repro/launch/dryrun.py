@@ -1,0 +1,258 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ruff: noqa: E402  (the two lines above MUST precede any jax import)
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware: 16x16 (one
+pod, 256 chips) and 2x16x16 (two pods, 512 chips) meshes, every assigned
+architecture and input shape, plus the PDES engine itself on 256/512
+timeline shards.  Emits per-cell JSON (memory analysis, cost analysis,
+roofline terms) consumed by benchmarks/roofline.py and EXPERIMENTS.md.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-1b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+  PYTHONPATH=src python -m repro.launch.dryrun --pdes
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import base as BB
+from repro.configs import registry as R
+from repro.launch import roofline as RL
+from repro.launch.mesh import make_pdes_mesh, make_production_mesh
+from repro.launch.steps import make_decode_step, make_prefill_step, \
+    make_train_step
+from repro.models import api
+from repro.optim import adamw
+from repro.parallel import sharding as SH
+
+DTYPE = jnp.bfloat16
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def _depth_scaled(cfg: BB.ArchConfig, repeats: int) -> BB.ArchConfig:
+    """Reduced-depth UNROLLED copy for the roofline R=1/R=2 lowerings
+    (scan bodies are costed once by XLA, so deltas need straight-line
+    HLO; see roofline.py)."""
+    upd = dict(n_layers=len(cfg.block_pattern) * repeats,
+               unroll_groups=True)
+    if cfg.encoder_layers:
+        upd["encoder_layers"] = repeats
+    return dataclasses.replace(cfg, **upd)
+
+
+def _batch_shardings(batch_specs, mesh, shape):
+    def one(path, s):
+        ndim = len(s.shape)
+        return SH.batch_sharding(mesh, s.shape,
+                                 seq_axis=1 if ndim > 1 else None,
+                                 batch_size=shape.global_batch)
+
+    return jax.tree_util.tree_map_with_path(one, batch_specs)
+
+
+def lower_cell(cfg: BB.ArchConfig, shape: BB.ShapeConfig, mesh):
+    """Build step fn + arg specs + shardings; return (lowered, compiled)."""
+    n_dev = mesh.devices.size
+    with SH.activate_mesh(mesh):
+        if shape.kind == "train":
+            step = make_train_step(cfg)
+            params = jax.eval_shape(
+                lambda: api.init_params(cfg, jax.random.key(0), DTYPE))
+            opt = jax.eval_shape(adamw.init, params)
+            batch = api.input_specs(cfg, shape, DTYPE)
+            p_sh = jax.tree.map(
+                lambda s: NamedSharding(mesh, s),
+                SH.fsdp_param_specs(params, mesh),
+                is_leaf=lambda x: isinstance(x, P))
+            from repro.optim.zero import zero1_shardings
+            mu_sh = zero1_shardings(params, mesh)
+            o_sh = adamw.AdamWState(mu=mu_sh, nu=mu_sh,
+                                    count=NamedSharding(mesh, P()))
+            b_sh = _batch_shardings(batch, mesh, shape)
+            jitted = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh))
+            lowered = jitted.lower(params, opt, batch)
+        elif shape.kind == "prefill":
+            step = make_prefill_step(cfg)
+            params = jax.eval_shape(
+                lambda: api.init_params(cfg, jax.random.key(0), DTYPE))
+            batch = api.input_specs(cfg, shape, DTYPE)
+            p_sh = jax.tree.map(
+                lambda s: NamedSharding(mesh, s),
+                SH.fsdp_param_specs(params, mesh),
+                is_leaf=lambda x: isinstance(x, P))
+            b_sh = _batch_shardings(batch, mesh, shape)
+            jitted = jax.jit(step, in_shardings=(p_sh, b_sh))
+            lowered = jitted.lower(params, batch)
+        else:  # decode
+            step = make_decode_step(cfg)
+            params = jax.eval_shape(
+                lambda: api.init_params(cfg, jax.random.key(0), DTYPE))
+            batch, caches = api.input_specs(cfg, shape, DTYPE)
+            p_sh = jax.tree.map(
+                lambda s: NamedSharding(mesh, s),
+                SH.param_specs(params, mesh.shape.get("model", 1)),
+                is_leaf=lambda x: isinstance(x, P))
+            c_sh = jax.tree.map(
+                lambda s: NamedSharding(mesh, s),
+                SH.cache_specs(caches, mesh, shape.global_batch,
+                               shape.seq_len),
+                is_leaf=lambda x: isinstance(x, P))
+            b_sh = _batch_shardings(batch, mesh, shape)
+            jitted = jax.jit(step, in_shardings=(p_sh, b_sh, c_sh))
+            lowered = jitted.lower(params, batch, caches)
+        compiled = lowered.compile()
+    return lowered, compiled
+
+
+def run_cell(arch: str, shape_name: str, mesh, mesh_name: str,
+             out_dir: Path, verbose: bool = True) -> dict:
+    cfg = R.get_config(arch)
+    shape = R.SHAPES[shape_name]
+    n_dev = mesh.devices.size
+    if not api.supports_shape(cfg, shape):
+        rec = dict(arch=arch, shape=shape_name, mesh=mesh_name,
+                   status="skipped",
+                   reason="full-attention arch: long_500k requires a "
+                          "sub-quadratic serve path (DESIGN.md §4)")
+        _write(rec, out_dir, arch, shape_name, mesh_name)
+        if verbose:
+            print(f"[dryrun] {arch} x {shape_name} x {mesh_name}: SKIPPED")
+        return rec
+
+    t0 = time.time()
+    total, active = RL.count_params(cfg)
+    mf = RL.model_flops_for(cfg, shape, total, active)
+
+    # depth extrapolation lowers (R=1, R=2)
+    terms12 = []
+    for r in (1, 2):
+        _, comp = lower_cell(_depth_scaled(cfg, r), shape, mesh)
+        terms12.append(RL.analyze(comp.cost_analysis(), comp.as_text(),
+                                  n_dev, mf))
+    terms = RL.extrapolate(terms12[0], terms12[1], cfg.pattern_repeats)
+
+    # full-depth compile: the actual fit/coherence proof
+    lowered, compiled = lower_cell(cfg, shape, mesh)
+    mem = compiled.memory_analysis()
+    mem_rec = {}
+    if mem is not None:
+        for f in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes"):
+            mem_rec[f] = getattr(mem, f, None)
+    cost_full = compiled.cost_analysis()
+
+    rec = dict(
+        arch=arch, shape=shape_name, mesh=mesh_name, status="ok",
+        n_devices=int(n_dev),
+        params_total=total, params_active=active,
+        model_flops=mf,
+        roofline=terms.as_dict(),
+        full_depth_cost=dict(
+            flops=float(cost_full.get("flops", 0.0)),
+            bytes_accessed=float(cost_full.get("bytes accessed", 0.0))),
+        memory_analysis=mem_rec,
+        elapsed_s=round(time.time() - t0, 1),
+    )
+    _write(rec, out_dir, arch, shape_name, mesh_name)
+    if verbose:
+        r = rec["roofline"]
+        print(f"[dryrun] {arch} x {shape_name} x {mesh_name}: OK "
+              f"dominant={r['dominant']} compute={r['compute_s']:.3e}s "
+              f"memory={r['memory_s']:.3e}s coll={r['collective_s']:.3e}s "
+              f"args/dev={mem_rec.get('argument_size_in_bytes')} "
+              f"({rec['elapsed_s']}s)")
+    return rec
+
+
+def run_pdes(n_shards: int, out_dir: Path) -> dict:
+    """Dry-run the PDES engine itself on a timeline-sharded mesh."""
+    from repro.core import EngineConfig, Simulator, linear_network, \
+        make_partition
+
+    t0 = time.time()
+    mesh = make_pdes_mesh(n_shards)
+    net = linear_network(n_routers=max(n_shards * 2, 64), n_photons=64)
+    part = make_partition(net, n_shards, scheme="contiguous")
+    cfg = EngineConfig(n_shards=n_shards, pool_cap=2048, qsm_cap=512,
+                       outbox_cap=512, route_cap=8)
+    sim = Simulator(net, part, cfg, mesh=mesh)
+    lowered = sim._step.lower(sim.state, sim.lookahead, 8)
+    compiled = lowered.compile()
+    cost = compiled.cost_analysis()
+    terms = RL.analyze(cost, compiled.as_text(), n_shards)
+    rec = dict(arch="pdes-qkd", shape=f"{n_shards}shards",
+               mesh=f"pdes{n_shards}", status="ok",
+               n_devices=n_shards, roofline=terms.as_dict(),
+               elapsed_s=round(time.time() - t0, 1))
+    _write(rec, out_dir, "pdes-qkd", f"{n_shards}shards", "pdes")
+    print(f"[dryrun] PDES x {n_shards} shards: OK "
+          f"dominant={terms.dominant} ({rec['elapsed_s']}s)")
+    return rec
+
+
+def _write(rec: dict, out_dir: Path, arch: str, shape: str, mesh: str):
+    out_dir.mkdir(parents=True, exist_ok=True)
+    path = out_dir / f"{arch}__{shape}__{mesh}.json"
+    path.write_text(json.dumps(rec, indent=1))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--pdes", action="store_true")
+    ap.add_argument("--out", default=str(OUT_DIR))
+    args = ap.parse_args()
+    out_dir = Path(args.out)
+
+    if args.pdes:
+        run_pdes(256, out_dir)
+        run_pdes(512, out_dir)
+        return
+
+    meshes = []
+    if args.mesh in ("single", "both"):
+        meshes.append(("single_pod_16x16", make_production_mesh()))
+    if args.mesh in ("multi", "both"):
+        meshes.append(("multi_pod_2x16x16",
+                       make_production_mesh(multi_pod=True)))
+
+    archs = sorted(R.ARCHS) if args.all else [args.arch]
+    shapes = [s.name for s in BB.ALL_SHAPES] if args.all else [args.shape]
+    failures = []
+    for mesh_name, mesh in meshes:
+        for arch in archs:
+            for shape in shapes:
+                try:
+                    run_cell(arch, shape, mesh, mesh_name, out_dir)
+                except Exception as e:
+                    traceback.print_exc()
+                    failures.append((arch, shape, mesh_name, repr(e)))
+                    _write(dict(arch=arch, shape=shape, mesh=mesh_name,
+                                status="failed", error=repr(e)),
+                           out_dir, arch, shape, mesh_name)
+    if failures:
+        print(f"[dryrun] {len(failures)} FAILURES:")
+        for f in failures:
+            print("   ", f)
+        raise SystemExit(1)
+    print("[dryrun] all requested cells passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (not module-level constants) so importing this module
+never touches jax device state; the dry-run sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before any jax import.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single pod (256 chips) or 2x16x16 two pods (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_pdes_mesh(n_shards: int, *, multi_pod: bool = False):
+    """Timeline-sharded mesh for the PDES engine: each device is one
+    parallel timeline ('shards' axis = the paper's MPI ranks)."""
+    if multi_pod:
+        return jax.make_mesh((2, n_shards // 2), ("pod", "shards"))
+    return jax.make_mesh((n_shards,), ("shards",))
+
+
+def make_host_mesh(n: int, axes=("data", "model"), shape=None):
+    """Small CPU mesh for tests (requires host_platform_device_count)."""
+    if shape is None:
+        shape = (n, 1)
+    return jax.make_mesh(shape, axes)

@@ -1,0 +1,46 @@
+"""Step functions lowered by the dry-run and driven by the trainer/server."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import api
+from repro.optim import adamw
+
+
+def make_train_step(cfg: ArchConfig, lr: float = 3e-4,
+                    grad_compress: bool = False):
+    from repro.optim import compress as C
+
+    def train_step(params, opt_state, batch, residual=None):
+        (loss, aux), grads = jax.value_and_grad(
+            api.loss_fn, has_aux=True)(params, cfg, batch)
+        if grad_compress:
+            grads, residual = C.apply(grads, residual)
+        params, opt_state, gnorm = adamw.update(grads, opt_state, params,
+                                                lr=lr)
+        metrics = {"loss": loss, "gnorm": gnorm,
+                   "moe_aux": aux["moe_aux_loss"],
+                   "moe_dropped": aux["moe_dropped"]}
+        if grad_compress:
+            return params, opt_state, residual, metrics
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig):
+    def prefill(params, batch):
+        return api.prefill_step(params, cfg, batch)
+
+    return prefill
+
+
+def make_decode_step(cfg: ArchConfig):
+    def decode(params, batch, caches):
+        return api.decode_step(params, cfg, batch, caches)
+
+    return decode

@@ -1,0 +1,52 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> ...``.
+
+On a real pod this binary runs once per host (jax.distributed handles the
+rest); on this container it runs single-process (optionally with a host
+mesh via --host-devices, set before jax init)."""
+import argparse
+import os
+import sys
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced same-family config")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--host-devices", type=int, default=0,
+                    help="CPU host device count for a (data,1) test mesh")
+    ap.add_argument("--telemetry-csv", default=None)
+    args = ap.parse_args()
+
+    if args.host_devices:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.host_devices}")
+
+    # import AFTER the device-count env var
+    from repro.configs import registry as R
+    from repro.launch.mesh import make_host_mesh
+    from repro.runtime.trainer import TrainConfig, Trainer
+
+    cfg = R.get_config(args.arch)
+    if args.smoke:
+        cfg = R.smoke_config(cfg)
+    mesh = make_host_mesh(args.host_devices) if args.host_devices else None
+    tc = TrainConfig(arch=cfg, steps=args.steps, lr=args.lr,
+                     seq_len=args.seq_len, global_batch=args.global_batch,
+                     ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every)
+    tr = Trainer(tc, mesh=mesh)
+    summary = tr.train()
+    if args.telemetry_csv:
+        tr.timer.to_csv(args.telemetry_csv)
+    print("train summary:", summary)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,1 @@
+"""Model substrate: one composable backbone covering the 10 assigned archs."""

@@ -1,0 +1,167 @@
+"""Unified model API over all 10 architectures.
+
+Dispatches decoder-only vs encoder-decoder vs VLM-prefix; provides the three
+step bodies (train / prefill / decode) that launch + dry-run lower, the
+ShapeDtypeStruct input specs per (arch x shape) cell, and synthetic batches
+for smoke tests.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import base as B
+from repro.models import encdec as ED
+from repro.models import frontends as F
+from repro.models import transformer as T
+
+
+def is_encdec(cfg: B.ArchConfig) -> bool:
+    return cfg.encoder_layers > 0
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def init_params(cfg: B.ArchConfig, key, dtype=jnp.float32):
+    if is_encdec(cfg):
+        return ED.init_encdec(cfg, key, dtype)
+    return T.init_lm(cfg, key, dtype)
+
+
+# ---------------------------------------------------------------------------
+# loss / train forward
+# ---------------------------------------------------------------------------
+def _xent(logits, targets, mask):
+    """TP-friendly cross entropy: every vocab-axis op is a reduction (GSPMD
+    keeps the vocab shard and inserts partial-reduce + all-reduce); the
+    gold logit uses an iota-select instead of a gather so the sharded axis
+    is never re-materialized unsharded."""
+    from repro.parallel.sharding import hint
+
+    lg = hint(logits, "dp", None, "model")
+    v = lg.shape[-1]
+    m = jnp.max(lg, axis=-1, keepdims=True)
+    shifted = (lg - m).astype(jnp.float32)
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1)) + m[..., 0].astype(
+        jnp.float32)
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, (v,), 0)
+    onehot = vocab_iota[None, None, :] == targets[..., None]
+    gold = jnp.sum(jnp.where(onehot, lg.astype(jnp.float32), 0.0), axis=-1)
+    nll = (lse - gold) * mask
+    return nll.sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def loss_fn(params, cfg: B.ArchConfig, batch):
+    """batch: tokens (B,T) [+ frames | patches].  Next-token LM loss."""
+    if is_encdec(cfg):
+        logits, aux = ED.forward(params, cfg, batch["tokens"],
+                                 batch["frames"])
+        text_logits = logits
+    else:
+        logits, aux = T.forward(params, cfg, batch["tokens"],
+                                prefix_embeds=batch.get("patches"))
+        p = cfg.patch_tokens
+        text_logits = logits[:, p:] if p else logits
+    targets = batch["tokens"][:, 1:]
+    mask = (targets >= 0).astype(jnp.float32)
+    loss = _xent(text_logits[:, :-1], jnp.maximum(targets, 0), mask)
+    loss = loss + 0.01 * aux["moe_aux_loss"] / max(cfg.n_layers, 1)
+    return loss, aux
+
+
+def prefill_step(params, cfg: B.ArchConfig, batch):
+    """Inference prefill: logits for the full prompt."""
+    if is_encdec(cfg):
+        logits, _ = ED.forward(params, cfg, batch["tokens"],
+                               batch["frames"])
+    else:
+        logits, _ = T.forward(params, cfg, batch["tokens"],
+                              prefix_embeds=batch.get("patches"))
+    return logits
+
+
+def decode_step(params, cfg: B.ArchConfig, batch, caches):
+    """One new token against a seq_len cache -> (logits (B,1,V), caches)."""
+    if is_encdec(cfg):
+        return ED.decode_step(params, cfg, batch["token"], caches,
+                              batch["enc_states"])
+    return T.decode_step(params, cfg, batch["token"], caches)
+
+
+def make_caches(cfg: B.ArchConfig, batch: int, seq_len: int,
+                dtype=jnp.float32):
+    if is_encdec(cfg):
+        return ED.init_caches(cfg, batch, seq_len, dtype)
+    return T.init_caches(cfg, batch, seq_len, dtype)
+
+
+# ---------------------------------------------------------------------------
+# input specs (dry-run) + synthetic batches (smoke)
+# ---------------------------------------------------------------------------
+def supports_shape(cfg: B.ArchConfig, shape: B.ShapeConfig) -> bool:
+    """long_500k only for sub-quadratic archs (DESIGN.md §4)."""
+    if shape.name == "long_500k":
+        return cfg.subquadratic
+    return True
+
+
+def input_specs(cfg: B.ArchConfig, shape: B.ShapeConfig,
+                dtype=jnp.bfloat16):
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    Bb, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind in ("train", "prefill"):
+        if is_encdec(cfg):
+            return {
+                "tokens": jax.ShapeDtypeStruct((Bb, S), i32),
+                "frames": jax.ShapeDtypeStruct(
+                    (Bb, cfg.encoder_frames, cfg.d_model), dtype),
+            }
+        batch = {"tokens": jax.ShapeDtypeStruct((Bb, S), i32)}
+        if cfg.patch_tokens:
+            batch["tokens"] = jax.ShapeDtypeStruct(
+                (Bb, S - cfg.patch_tokens), i32)
+            batch["patches"] = jax.ShapeDtypeStruct(
+                (Bb, cfg.patch_tokens, cfg.d_model), dtype)
+        return batch
+    # decode: one token + cache of length seq_len
+    batch = {"token": jax.ShapeDtypeStruct((Bb, 1), i32)}
+    if is_encdec(cfg):
+        batch["enc_states"] = jax.ShapeDtypeStruct(
+            (Bb, cfg.encoder_frames, cfg.d_model), dtype)
+    caches = jax.eval_shape(
+        lambda: make_caches(cfg, Bb, S, dtype))
+    return batch, caches
+
+
+def synth_batch(cfg: B.ArchConfig, shape: B.ShapeConfig, key,
+                dtype=jnp.float32):
+    """Concrete random batch (smoke tests / examples)."""
+    Bb, S = shape.global_batch, shape.seq_len
+    k1, k2 = jax.random.split(key)
+    if shape.kind in ("train", "prefill"):
+        if is_encdec(cfg):
+            return {
+                "tokens": jax.random.randint(k1, (Bb, S), 0,
+                                             cfg.vocab_size, jnp.int32),
+                "frames": F.audio_frames(k2, Bb, cfg.encoder_frames,
+                                         cfg.d_model, dtype),
+            }
+        batch = {"tokens": jax.random.randint(
+            k1, (Bb, S - cfg.patch_tokens if cfg.patch_tokens else S),
+            0, cfg.vocab_size, jnp.int32)}
+        if cfg.patch_tokens:
+            batch["patches"] = F.vision_patches(k2, Bb, cfg.patch_tokens,
+                                                cfg.d_model, dtype)
+        return batch
+    batch = {"token": jax.random.randint(k1, (Bb, 1), 0, cfg.vocab_size,
+                                         jnp.int32)}
+    if is_encdec(cfg):
+        batch["enc_states"] = F.audio_frames(k2, Bb, cfg.encoder_frames,
+                                             cfg.d_model, dtype)
+    caches = make_caches(cfg, Bb, S, dtype)
+    return batch, caches

@@ -1,0 +1,123 @@
+"""GQA attention: init, prefill (flash kernel on TPU), and cached decode.
+
+Decode processes ONE new token against a (B, Hkv, S, D) KV cache — O(S)
+work, expressed as dense einsums against the cache (no kernel needed: the
+op is bandwidth-bound reading the cache once).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.models.layers import rope, truncated_normal
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray    # (B, Hkv, S, D)
+    v: jnp.ndarray    # (B, Hkv, S, D)
+    length: jnp.ndarray  # int32[] valid prefix length
+
+
+def attn_init(key, cfg, dtype):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d, H, Hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    s = d ** -0.5
+    p = {
+        "wq": truncated_normal(k1, (d, H, hd), dtype, s),
+        "wk": truncated_normal(k2, (d, Hkv, hd), dtype, s),
+        "wv": truncated_normal(k3, (d, Hkv, hd), dtype, s),
+        "wo": truncated_normal(k4, (H, hd, d), dtype, (H * hd) ** -0.5),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H, hd), dtype)
+        p["bk"] = jnp.zeros((Hkv, hd), dtype)
+        p["bv"] = jnp.zeros((Hkv, hd), dtype)
+    return p
+
+
+def _qkv(p, x, cfg, positions):
+    q = jnp.einsum("btd,dhk->bthk", x, p["wq"])
+    k = jnp.einsum("btd,dhk->bthk", x, p["wk"])
+    v = jnp.einsum("btd,dhk->bthk", x, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attention_prefill(p, x, cfg, *, window: Optional[int] = None,
+                      causal: bool = True, positions=None,
+                      kv: Optional[tuple] = None):
+    """x (B,T,d) -> (B,T,d).  kv overrides self-kv for cross-attention."""
+    from repro.models.chunked_attention import chunked_attention
+
+    B, T, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(T), (B, T))
+    q, k, v = _qkv(p, x, cfg, positions)
+    if kv is not None:
+        k, v = kv
+    # (B,T,H,D) -> (B,H,T,D)
+    t = lambda a: a.transpose(0, 2, 1, 3)
+    if jax.default_backend() == "tpu":
+        # Pallas flash kernel (kernels/flash_attention)
+        o = flash_attention(t(q), t(k), t(v), causal=causal, window=window,
+                            sm_scale=cfg.head_dim ** -0.5)
+    else:
+        # flash-equivalent chunked XLA path (same working-set structure;
+        # what the dry-run lowers — see chunked_attention.py)
+        o = chunked_attention(
+            t(q), t(k), t(v), causal=causal, window=window,
+            sm_scale=cfg.head_dim ** -0.5,
+            chunk=min(cfg.attn_chunk, k.shape[1]),
+            unroll=cfg.unroll_groups,
+            causal_skip=cfg.attn_causal_skip and cfg.unroll_groups)
+    o = o.transpose(0, 2, 1, 3)  # (B,T,H,D)
+    return jnp.einsum("bthk,hkd->btd", o, p["wo"]), (k, v)
+
+
+def attention_decode(p, x, cfg, cache: KVCache, *,
+                     window: Optional[int] = None):
+    """x (B,1,d) one new token; returns (out (B,1,d), new cache)."""
+    B, _, _ = x.shape
+    S = cache.k.shape[2]
+    pos = jnp.broadcast_to(cache.length[None], (B, 1))
+    q, k_new, v_new = _qkv(p, x, cfg, pos)
+
+    # append at position `length` (static-shape dynamic-index update)
+    k = jax.lax.dynamic_update_slice(
+        cache.k, k_new.transpose(0, 2, 1, 3),
+        (0, 0, cache.length, 0))
+    v = jax.lax.dynamic_update_slice(
+        cache.v, v_new.transpose(0, 2, 1, 3),
+        (0, 0, cache.length, 0))
+
+    H, Hkv = cfg.n_heads, cfg.n_kv_heads
+    qh = q[:, 0]                      # (B,H,D)
+    group = H // Hkv
+    qg = qh.reshape(B, Hkv, group, cfg.head_dim)
+    s = jnp.einsum("bngd,bnsd->bngs", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * cfg.head_dim ** -0.5
+    kpos = jnp.arange(S)
+    mask = kpos[None, :] <= cache.length
+    if window is not None:
+        mask &= kpos[None, :] > cache.length - window
+    s = jnp.where(mask[:, None, None, :], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bngs,bnsd->bngd", w, v.astype(jnp.float32))
+    o = o.reshape(B, 1, H, cfg.head_dim).astype(x.dtype)
+    out = jnp.einsum("bthk,hkd->btd", o, p["wo"])
+    return out, KVCache(k=k, v=v, length=cache.length + 1)
+
+
+def init_cache(cfg, batch, seq_len, dtype, n_kv_heads=None):
+    Hkv = n_kv_heads or cfg.n_kv_heads
+    shape = (batch, Hkv, seq_len, cfg.head_dim)
+    return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
+                   length=jnp.int32(0))

@@ -1,0 +1,112 @@
+"""Flash-equivalent attention in pure XLA ops (online softmax over KV
+chunks).
+
+This is the attention the dry-run lowers on non-TPU backends: same O(T*d)
+working set as the Pallas kernel (never materializes the (T, S) score
+matrix), so the roofline terms extracted from the compiled HLO reflect the
+TPU execution structure rather than a dense oracle.  With
+``unroll=True`` (the dry-run's R=1/R=2 depth lowerings) the chunk loop is
+emitted as straight-line HLO so XLA cost analysis counts every chunk.
+
+``causal_skip=True`` (beyond-baseline optimization, §Perf) also blocks the
+query dimension and skips fully-masked (q-block, kv-chunk) pairs — halving
+attention FLOPs for causal masks.  Requires unroll (static skip decisions).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _mask(qpos, kpos, causal, window, kv_len):
+    m = kpos < kv_len
+    if causal:
+        m &= qpos >= kpos
+    if window is not None:
+        m &= (qpos - kpos) < window
+    return m
+
+
+def chunked_attention(q, k, v, *, causal=True, window=None, sm_scale=None,
+                      chunk=1024, q_chunk=None, unroll=False,
+                      causal_skip=False):
+    """q (B,H,T,D), k/v (B,Hkv,S,D) -> (B,H,T,D)."""
+    B, H, T, D = q.shape
+    _, Hkv, S, _ = k.shape
+    if sm_scale is None:
+        sm_scale = D ** -0.5
+    g = H // Hkv
+    c = min(chunk, S)
+    nc = -(-S // c)
+    pad_s = nc * c - S
+    if pad_s:
+        padw = ((0, 0), (0, 0), (0, pad_s), (0, 0))
+        k = jnp.pad(k, padw)
+        v = jnp.pad(v, padw)
+
+    qg = q.reshape(B, Hkv, g, T, D).astype(jnp.float32) * sm_scale
+    kc = k.reshape(B, Hkv, nc, c, D).astype(jnp.float32)
+    vc = v.reshape(B, Hkv, nc, c, D).astype(jnp.float32)
+
+    def make_step(qpos):
+        tq = qpos.shape[0]
+
+        def step(carry, inp):
+            m_run, l_run, acc = carry
+            kj, vj, off = inp
+            s = jnp.einsum("bngtd,bncd->bngtc", qg_blk, kj)
+            kpos = off + jnp.arange(c)
+            msk = _mask(qpos[:, None], kpos[None, :], causal, window, S)
+            s = jnp.where(msk[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m_run, s.max(-1))
+            alpha = jnp.exp(m_run - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l_run * alpha + p.sum(-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bngtc,bncd->bngtd", p, vj)
+            return (m_new, l_new, acc), None
+
+        return step
+
+    def run_block(qg_blk_in, qpos):
+        nonlocal qg_blk
+        qg_blk = qg_blk_in
+        tq = qpos.shape[0]
+        m0 = jnp.full((B, Hkv, g, tq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, g, tq), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, g, tq, D), jnp.float32)
+        offs = jnp.arange(nc) * c
+        step = make_step(qpos)
+        if unroll:
+            carry = (m0, l0, a0)
+            for j in range(nc):
+                if causal and causal_skip:
+                    q_hi = int(qpos[-1])
+                    if j * c > q_hi:
+                        continue  # fully-masked chunk: skip statically
+                carry, _ = step(carry, (kc[:, :, j], vc[:, :, j],
+                                        jnp.int32(j * c)))
+            m_run, l_run, acc = carry
+        else:
+            (m_run, l_run, acc), _ = jax.lax.scan(
+                step, (m0, l0, a0),
+                (kc.transpose(2, 0, 1, 3, 4), vc.transpose(2, 0, 1, 3, 4),
+                 offs))
+        l_run = jnp.where(l_run == 0.0, 1.0, l_run)
+        return acc / l_run[..., None]
+
+    qg_blk = None
+    if causal_skip and unroll and causal:
+        bq = q_chunk or c
+        nq = -(-T // bq)
+        outs = []
+        for i in range(nq):
+            lo, hi = i * bq, min((i + 1) * bq, T)
+            qpos = jnp.arange(lo, hi)
+            outs.append(run_block(qg[:, :, :, lo:hi], qpos))
+        out = jnp.concatenate(outs, axis=3)
+    else:
+        out = run_block(qg, jnp.arange(T))
+    return out.reshape(B, H, T, D).astype(q.dtype)

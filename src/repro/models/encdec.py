@@ -1,0 +1,158 @@
+"""Encoder-decoder backbone (whisper family).
+
+The audio frontend is a STUB per the brief: `input_specs()` supplies
+precomputed frame embeddings (B, frames, d_model) in place of the conv
+front end + mel spectrogram.  Encoder = non-causal attention blocks;
+decoder = causal self-attention + cross-attention + MLP, scanned over
+layers like the decoder-only path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import base as B
+from repro.models import attention as A
+from repro.models.layers import (
+    embed, embed_init, mlp, mlp_init, rmsnorm, rmsnorm_init, truncated_normal,
+    unembed,
+)
+from repro.parallel.sharding import hint
+
+
+def _enc_block_init(key, cfg, dtype):
+    ks = jax.random.split(key, 2)
+    return {"ln1": rmsnorm_init(cfg.d_model, dtype),
+            "attn": A.attn_init(ks[0], cfg, dtype),
+            "ln2": rmsnorm_init(cfg.d_model, dtype),
+            "mlp": mlp_init(ks[1], cfg.d_model, cfg.d_ff, dtype)}
+
+
+def _dec_block_init(key, cfg, dtype):
+    ks = jax.random.split(key, 3)
+    return {"ln1": rmsnorm_init(cfg.d_model, dtype),
+            "self_attn": A.attn_init(ks[0], cfg, dtype),
+            "ln_x": rmsnorm_init(cfg.d_model, dtype),
+            "cross_attn": A.attn_init(ks[1], cfg, dtype),
+            "ln2": rmsnorm_init(cfg.d_model, dtype),
+            "mlp": mlp_init(ks[2], cfg.d_model, cfg.d_ff, dtype)}
+
+
+def init_encdec(cfg: B.ArchConfig, key, dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    enc_keys = jax.random.split(ks[0], cfg.encoder_layers)
+    dec_keys = jax.random.split(ks[1], cfg.n_layers)
+    enc = [_enc_block_init(k, cfg, dtype) for k in enc_keys]
+    dec = [_dec_block_init(k, cfg, dtype) for k in dec_keys]
+    return {
+        "embed": embed_init(ks[2], cfg.vocab_size, cfg.d_model, dtype),
+        "pos_enc": truncated_normal(ks[3], (cfg.encoder_frames,
+                                            cfg.d_model), dtype, 0.02),
+        "enc": jax.tree.map(lambda *xs: jnp.stack(xs), *enc),
+        "dec": jax.tree.map(lambda *xs: jnp.stack(xs), *dec),
+        "enc_norm": rmsnorm_init(cfg.d_model, dtype),
+        "final_norm": rmsnorm_init(cfg.d_model, dtype),
+    }
+
+
+def _scan_or_unroll(block, carry, stacked, unroll, with_ys=False):
+    if not unroll:
+        return jax.lax.scan(block, carry, stacked)
+    n = jax.tree.leaves(stacked)[0].shape[0]
+    ys = []
+    for g in range(n):
+        carry, y = block(carry, jax.tree.map(lambda a, g=g: a[g], stacked))
+        ys.append(y)
+    if with_ys:
+        return carry, jax.tree.map(lambda *xs: jnp.stack(xs), *ys)
+    return carry, None
+
+
+def encode(params, cfg, frames):
+    """frames (B, F, d) stub features -> (B, F, d) encoder states."""
+    x = frames + params["pos_enc"][None, : frames.shape[1]]
+    x = hint(x, "dp", None, None)
+
+    def block(x, bp):
+        h, _ = A.attention_prefill(
+            bp["attn"], rmsnorm(bp["ln1"], x, cfg.norm_eps), cfg,
+            causal=False)
+        x = x + h
+        x = x + mlp(bp["mlp"], rmsnorm(bp["ln2"], x, cfg.norm_eps),
+                    cfg.mlp_kind)
+        return hint(x, "dp", None, None), None
+
+    x, _ = _scan_or_unroll(block, x, params["enc"], cfg.unroll_groups)
+    return rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def _cross_kv(bp, enc_states, cfg):
+    k = jnp.einsum("bfd,dhk->bfhk", enc_states, bp["cross_attn"]["wk"])
+    v = jnp.einsum("bfd,dhk->bfhk", enc_states, bp["cross_attn"]["wv"])
+    if cfg.qkv_bias:
+        k = k + bp["cross_attn"]["bk"]
+        v = v + bp["cross_attn"]["bv"]
+    return k, v
+
+
+def forward(params, cfg: B.ArchConfig, tokens, frames):
+    """Teacher-forced seq2seq forward -> (logits, aux)."""
+    enc_states = encode(params, cfg, frames)
+    x = embed(params["embed"], tokens) * cfg.d_model ** 0.5
+    x = hint(x, "dp", None, None)
+
+    def block(x, bp):
+        h, _ = A.attention_prefill(
+            bp["self_attn"], rmsnorm(bp["ln1"], x, cfg.norm_eps), cfg)
+        x = x + h
+        xq = rmsnorm(bp["ln_x"], x, cfg.norm_eps)
+        kv = _cross_kv(bp, enc_states, cfg)
+        # cross-attn: no positional rotation (positions=0 -> rope identity)
+        h, _ = A.attention_prefill(
+            bp["cross_attn"], xq, cfg, causal=False, kv=kv,
+            positions=jnp.zeros(xq.shape[:2], jnp.int32))
+        x = x + h
+        x = x + mlp(bp["mlp"], rmsnorm(bp["ln2"], x, cfg.norm_eps),
+                    cfg.mlp_kind)
+        return hint(x, "dp", None, None), None
+
+    x, _ = _scan_or_unroll(block, x, params["dec"], cfg.unroll_groups)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed(params["embed"], x, True)
+    aux = {"moe_aux_loss": jnp.float32(0.0), "moe_dropped": jnp.int32(0)}
+    return logits, aux
+
+
+def init_caches(cfg: B.ArchConfig, batch: int, seq_len: int,
+                dtype=jnp.float32):
+    caches = [A.init_cache(cfg, batch, seq_len, dtype)
+              for _ in range(cfg.n_layers)]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *caches)
+
+
+def decode_step(params, cfg: B.ArchConfig, token, caches, enc_states):
+    """One decoder token with cached self-attn + cross-attn to enc_states."""
+    x = embed(params["embed"], token) * cfg.d_model ** 0.5
+
+    def block(x, inp):
+        bp, cache = inp
+        h, cache = A.attention_decode(
+            bp["self_attn"], rmsnorm(bp["ln1"], x, cfg.norm_eps), cfg,
+            cache)
+        x = x + h
+        xq = rmsnorm(bp["ln_x"], x, cfg.norm_eps)
+        kv = _cross_kv(bp, enc_states, cfg)
+        # cross-attn: no positional rotation (positions=0 -> rope identity)
+        h, _ = A.attention_prefill(
+            bp["cross_attn"], xq, cfg, causal=False, kv=kv,
+            positions=jnp.zeros(xq.shape[:2], jnp.int32))
+        x = x + h
+        x = x + mlp(bp["mlp"], rmsnorm(bp["ln2"], x, cfg.norm_eps),
+                    cfg.mlp_kind)
+        return x, cache
+
+    x, new_caches = _scan_or_unroll(block, x, (params["dec"], caches),
+                                    cfg.unroll_groups, with_ys=True)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed(params["embed"], x, True)
+    return logits, new_caches

@@ -1,0 +1,24 @@
+"""Modality frontends — STUBS per the brief.
+
+``[audio]`` and ``[vlm]`` cells specify the transformer BACKBONE only; the
+conv/mel frontend (whisper) and the vision tower (pixtral) are replaced by
+precomputed embeddings that `input_specs()` supplies directly.  These
+helpers generate deterministic synthetic embeddings for smoke tests and
+examples.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def audio_frames(key, batch: int, frames: int, d_model: int,
+                 dtype=jnp.float32):
+    """Stand-in for whisper's conv-downsampled mel frames."""
+    return jax.random.normal(key, (batch, frames, d_model), dtype) * 0.02
+
+
+def vision_patches(key, batch: int, patches: int, d_model: int,
+                   dtype=jnp.float32):
+    """Stand-in for pixtral's ViT patch embeddings."""
+    return jax.random.normal(key, (batch, patches, d_model), dtype) * 0.02

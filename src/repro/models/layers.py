@@ -1,0 +1,89 @@
+"""Shared layers: RMSNorm, RoPE, MLPs, embeddings (pure functions + inits).
+
+Parameters are plain dicts of jnp arrays; initializers take an explicit key
+and dtype.  Logical sharding of activations is applied in transformer.py via
+repro.parallel.sharding.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def truncated_normal(key, shape, dtype, scale):
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+def rmsnorm_init(d, dtype):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p, x, eps):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope(x, positions, theta):
+    """x (..., T, H, D) with D even; positions (..., T)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., T, half)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+def mlp_init(key, d_model, d_ff, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = d_model ** -0.5
+    s_out = d_ff ** -0.5
+    return {
+        "wi": truncated_normal(k1, (d_model, d_ff), dtype, s_in),
+        "wg": truncated_normal(k2, (d_model, d_ff), dtype, s_in),
+        "wo": truncated_normal(k3, (d_ff, d_model), dtype, s_out),
+    }
+
+
+def mlp(p, x, kind: str):
+    h = jnp.einsum("btd,df->btf", x, p["wi"])
+    g = jnp.einsum("btd,df->btf", x, p["wg"])
+    act = jax.nn.gelu(g, approximate=True) if kind == "geglu" \
+        else jax.nn.silu(g)
+    return jnp.einsum("btf,fd->btd", act * h, p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head
+# ---------------------------------------------------------------------------
+def embed_init(key, vocab, d_model, dtype):
+    # N(0, 1/sqrt(d)): with the x*sqrt(d) embedding scaling this gives unit
+    # activations and O(1) tied-head logits at init.
+    return {"table": truncated_normal(key, (vocab, d_model), dtype,
+                                      d_model ** -0.5)}
+
+
+def embed(p, tokens):
+    return p["table"][tokens]
+
+
+def unembed(p_embed, x, tied: bool, p_head=None):
+    table = p_embed["table"] if tied else p_head["table"]
+    return jnp.einsum("btd,vd->btv", x, table)

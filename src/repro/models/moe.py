@@ -1,0 +1,280 @@
+"""Mixture-of-experts FFN with sort-based dispatch and static capacity.
+
+Expert-parallel friendly: expert weight tensors carry a leading E axis
+(sharded over the `model` mesh axis); dispatch is the sort/rank/scatter
+pattern (no (T, E, C) one-hot blowup):
+
+  route -> top-k -> stable-sort assignments by expert -> rank within expert
+  -> scatter into (E, C, d) buffers -> batched expert einsum -> weighted
+  scatter-add back to tokens.
+
+Two dispatch modes (§Perf iteration, EXPERIMENTS.md):
+  * global (baseline, ``cfg.moe_dp_slices == 0``): one argsort over every
+    assignment in the global batch.  Semantically clean but GSPMD must
+    all-gather the token stream to sort it — the collective pathology the
+    baseline roofline records.
+  * sliced (``moe_dp_slices = DP degree``): tokens reshape to
+    (slices, N/slices) with the slice dim sharded over 'data'; each slice
+    sorts/scatters locally with per-slice capacity C/slices (what real MoE
+    systems do — per-device capacity), and only the (slices, E, C', d)
+    expert buffers cross the network to the expert owners.
+
+Overflowing assignments beyond capacity are dropped (token keeps its other
+experts / residual path); per-expert load is returned for the telemetry
+that mirrors the paper's straggler analysis (DESIGN.md §4: expert skew IS
+the partitioning/straggler problem at token granularity).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import truncated_normal
+from repro.parallel.sharding import hint
+
+
+def moe_init(key, cfg, dtype):
+    E, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s_in, s_out = d ** -0.5, f ** -0.5
+    return {
+        "router": truncated_normal(k1, (d, E), jnp.float32, s_in),
+        "wi": truncated_normal(k2, (E, d, f), dtype, s_in),
+        "wg": truncated_normal(k3, (E, d, f), dtype, s_in),
+        "wo": truncated_normal(k4, (E, f, d), dtype, s_out),
+    }
+
+
+def _dispatch_ffn(p, xf, cfg, C):
+    """Core dispatch + expert FFN for a flat token slice xf (N, d)."""
+    N, d = xf.shape
+    E, k = cfg.n_experts, cfg.moe_top_k
+
+    logits = xf.astype(jnp.float32) @ p["router"]          # (N, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, eidx = jax.lax.top_k(probs, k)                   # (N, k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    fe = eidx.reshape(-1)                                  # (N*k,)
+    fw = gate.reshape(-1).astype(xf.dtype)
+    ft = jnp.repeat(jnp.arange(N, dtype=jnp.int32), k)
+    order = jnp.argsort(fe, stable=True)
+    se, sw, stok = fe[order], fw[order], ft[order]
+    pos = jnp.arange(N * k, dtype=jnp.int32)
+    rank = pos - jnp.searchsorted(se, se, side="left").astype(jnp.int32)
+    ok = rank < C
+    slot = jnp.where(ok, se * C + rank, E * C)
+
+    buf = jnp.zeros((E * C, d), xf.dtype).at[slot].set(
+        xf[stok] * ok[:, None].astype(xf.dtype), mode="drop")
+    buf = buf.reshape(E, C, d)
+
+    h = jnp.einsum("ecd,edf->ecf", buf, p["wi"])
+    g = jnp.einsum("ecd,edf->ecf", buf, p["wg"])
+    out = jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * h, p["wo"])
+    out = out.reshape(E * C, d)
+
+    contrib = out[jnp.clip(slot, 0, E * C - 1)] * \
+        (sw * ok.astype(sw.dtype))[:, None]
+    y = jnp.zeros((N, d), xf.dtype).at[stok].add(contrib)
+
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(eidx[:, 0], E, dtype=jnp.float32), axis=0)
+    frac_probs = jnp.mean(probs, axis=0)
+    aux_loss = E * jnp.sum(frac_tokens * frac_probs)
+    load = jnp.zeros((E,), jnp.int32).at[se].add(
+        ok.astype(jnp.int32), mode="drop")
+    dropped = jnp.sum((~ok).astype(jnp.int32))
+    return y, dict(aux_loss=aux_loss, expert_load=load, dropped=dropped)
+
+
+def _dispatch_ffn_sliced(p, xs, cfg, C):
+    """Batched-over-slices dispatch: xs (S, n, d), slice dim sharded over
+    'data'.  Sort/scatter/gather are slice-local; expert buffers are
+    explicitly resharded to E-over-'model' so the expert FFN contracts d
+    locally (one data->model reshard each way instead of all-reducing
+    activation partial sums)."""
+    S, n, d = xs.shape
+    E, k = cfg.n_experts, cfg.moe_top_k
+    sidx = jnp.arange(S, dtype=jnp.int32)[:, None]
+
+    logits = xs.astype(jnp.float32) @ p["router"]            # (S, n, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, eidx = jax.lax.top_k(probs, k)                     # (S, n, k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    fe = eidx.reshape(S, n * k)
+    fw = gate.reshape(S, n * k).astype(xs.dtype)
+    ft = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(n, dtype=jnp.int32), k)[None], (S, n * k))
+    order = jnp.argsort(fe, axis=-1, stable=True)
+    se = jnp.take_along_axis(fe, order, axis=-1)
+    sw = jnp.take_along_axis(fw, order, axis=-1)
+    stok = jnp.take_along_axis(ft, order, axis=-1)
+    pos = jnp.arange(n * k, dtype=jnp.int32)[None]
+    first = jax.vmap(lambda a: jnp.searchsorted(a, a, side="left"))(se)
+    rank = pos - first.astype(jnp.int32)
+    ok = rank < C
+    slot = jnp.where(ok, se * C + rank, E * C)
+
+    gathered = jnp.take_along_axis(xs, stok[..., None], axis=1)
+    gathered = hint(gathered * ok[..., None].astype(xs.dtype),
+                    "data", None, None)
+    buf = jnp.zeros((S, E * C, d), xs.dtype).at[sidx, slot].set(
+        gathered, mode="drop")
+    # reshard: slice-local buffers -> expert owners (E over 'model')
+    buf = hint(buf.reshape(S, E, C, d), "data", "model", None, None)
+
+    h = jnp.einsum("secd,edf->secf", buf, p["wi"])
+    g = jnp.einsum("secd,edf->secf", buf, p["wg"])
+    out = jnp.einsum("secf,efd->secd", jax.nn.silu(g) * h, p["wo"])
+    out = hint(out, "data", "model", None, None)
+    out = out.reshape(S, E * C, d)
+
+    contrib = jnp.take_along_axis(
+        out, jnp.clip(slot, 0, E * C - 1)[..., None], axis=1)
+    contrib = hint(contrib, "data", None, None) * \
+        (sw * ok.astype(sw.dtype))[..., None]
+    y = jnp.zeros((S, n, d), xs.dtype).at[sidx, stok].add(contrib)
+    y = hint(y, "data", None, None)
+
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(eidx[..., 0], E, dtype=jnp.float32), axis=(0, 1))
+    frac_probs = jnp.mean(probs, axis=(0, 1))
+    aux_loss = E * jnp.sum(frac_tokens * frac_probs)
+    load = jnp.zeros((E,), jnp.int32).at[se.reshape(-1)].add(
+        ok.reshape(-1).astype(jnp.int32), mode="drop")
+    dropped = jnp.sum((~ok).astype(jnp.int32))
+    return y, dict(aux_loss=aux_loss, expert_load=load, dropped=dropped)
+
+
+def _moe_shardmap(p, x, cfg, mesh):
+    """Explicit expert parallelism (§Perf v3).
+
+    shard_map over the full mesh: tokens enter sharded over DP and
+    REPLICATED across 'model'; every model shard computes the (identical)
+    routing, keeps only assignments owned by its E/TP experts, runs their
+    FFN entirely locally (full d after the explicit FSDP weight gather),
+    and one psum over 'model' combines expert contributions.  Per-layer
+    comm = activations psum + FSDP weight gather — no data-dependent
+    GSPMD resharding of the dispatch stream.
+    """
+    from jax import lax
+    from jax.sharding import PartitionSpec as P
+
+    from repro.parallel.sharding import dp_axes
+
+    B, T, d = x.shape
+    E, k = cfg.n_experts, cfg.moe_top_k
+    dp = dp_axes(mesh) or ("data",)
+    dp = tuple(a for a in dp if a in mesh.axis_names)
+    import numpy as _np
+    S_dp = int(_np.prod([mesh.shape[a] for a in dp]))
+    TP = mesh.shape.get("model", 1)
+    if E % TP or (B * T) % S_dp:
+        return None  # caller falls back
+    E_l = E // TP
+    n_l = (B * T) // S_dp
+    # capacity per expert PER DATA ROW (each row dispatches only its own
+    # n_l tokens) — sizing from the global batch would pad every expert
+    # buffer by the DP degree and burn that factor in empty-slot FFN work
+    C_e = int(-(-k * n_l // E) * cfg.capacity_factor)
+    C_e = max(8, -(-C_e // 8) * 8)
+
+    dp_entry = dp if len(dp) > 1 else dp[0]
+
+    def body(xb, router, wi, wg, wo):
+        xl = xb.reshape(-1, d)                              # (n_l, d)
+        # FSDP weights: gather the dp-sharded dim explicitly
+        if wi.shape[1] != d:
+            wi = lax.all_gather(wi, dp_entry, axis=1, tiled=True)
+            wg = lax.all_gather(wg, dp_entry, axis=1, tiled=True)
+        if wo.shape[2] != d:
+            wo = lax.all_gather(wo, dp_entry, axis=2, tiled=True)
+        col = lax.axis_index("model")
+
+        logits = xl.astype(jnp.float32) @ router            # (n_l, E)
+        probs = jax.nn.softmax(logits, axis=-1)
+        gate, eidx = jax.lax.top_k(probs, k)
+        gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+        fe = eidx.reshape(-1)
+        fw = gate.reshape(-1).astype(xl.dtype)
+        ft = jnp.repeat(jnp.arange(n_l, dtype=jnp.int32), k)
+        mine = (fe // E_l) == col
+        e_loc = fe - col * E_l
+        key = jnp.where(mine, e_loc, E_l)
+        order = jnp.argsort(key, stable=True)
+        sk = key[order]
+        sw = fw[order]
+        stok = ft[order]
+        pos = jnp.arange(n_l * k, dtype=jnp.int32)
+        first = jnp.searchsorted(sk, sk, side="left").astype(jnp.int32)
+        rank = pos - first
+        ok = (sk < E_l) & (rank < C_e)
+        slot = jnp.where(ok, sk * C_e + rank, E_l * C_e)
+
+        buf = jnp.zeros((E_l * C_e, d), xl.dtype).at[slot].set(
+            xl[stok] * ok[:, None].astype(xl.dtype), mode="drop")
+        buf = buf.reshape(E_l, C_e, d)
+        h = jnp.einsum("ecd,edf->ecf", buf, wi)
+        g = jnp.einsum("ecd,edf->ecf", buf, wg)
+        out = jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * h, wo)
+        out = out.reshape(E_l * C_e, d)
+
+        contrib = out[jnp.clip(slot, 0, E_l * C_e - 1)] * \
+            (sw * ok.astype(sw.dtype))[:, None]
+        y_part = jnp.zeros((n_l, d), xl.dtype).at[stok].add(contrib)
+        y = lax.psum(y_part, "model")                       # EP combine
+
+        # aux: identical routing on every col; loads are col-local
+        frac_tokens = jnp.mean(
+            jax.nn.one_hot(eidx[:, 0], E, dtype=jnp.float32), axis=0)
+        frac_probs = jnp.mean(probs, axis=0)
+        aux_loss = lax.pmean(E * jnp.sum(frac_tokens * frac_probs),
+                             dp_entry)
+        load_l = jnp.zeros((E_l,), jnp.int32).at[
+            jnp.where(ok, sk, E_l)].add(1, mode="drop")
+        load = lax.psum(lax.all_gather(load_l, "model", tiled=True),
+                        dp_entry)
+        dropped = lax.psum(lax.psum(
+            jnp.sum((mine & ~ok).astype(jnp.int32)), "model"), dp_entry)
+        return y.reshape(xb.shape), aux_loss, load, dropped
+
+    y, aux_loss, load, dropped = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(dp_entry, None, None), P(None, None),
+                  P("model", dp_entry, None), P("model", dp_entry, None),
+                  P("model", None, dp_entry)),
+        out_specs=(P(dp_entry, None, None), P(), P(), P()),
+        check_vma=False,
+    )(x, p["router"], p["wi"], p["wg"], p["wo"])
+    return y, dict(aux_loss=aux_loss, expert_load=load, dropped=dropped)
+
+
+def moe_apply(p, x, cfg):
+    """x (B,T,d) -> (y (B,T,d), aux dict)."""
+    B, T, d = x.shape
+    N = B * T
+    E, k = cfg.n_experts, cfg.moe_top_k
+    C = int(-(-k * N // E) * cfg.capacity_factor)
+    C = max(8, -(-C // 8) * 8)
+
+    if cfg.moe_shard_map:
+        from repro.parallel.sharding import active_mesh
+        mesh = active_mesh()
+        if mesh is not None:
+            out = _moe_shardmap(p, x, cfg, mesh)
+            if out is not None:
+                return out
+
+    xf = x.reshape(N, d)
+    S = cfg.moe_dp_slices
+    if S > 1 and N % S == 0:
+        C_l = max(8, -(-C // S // 8) * 8)
+        xs = hint(xf.reshape(S, N // S, d), "data", None, None)
+        y, aux = _dispatch_ffn_sliced(p, xs, cfg, C_l)
+        y = y.reshape(N, d)
+    else:
+        y, aux = _dispatch_ffn(p, xf, cfg, C)
+    return y.reshape(B, T, d), aux

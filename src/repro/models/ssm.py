@@ -1,0 +1,321 @@
+"""State-space / recurrent mixers: Mamba2 (SSD, chunked) and xLSTM blocks.
+
+Mamba2 follows the SSD formulation: per-head scalar decay A, data-dependent
+dt/B/C; chunked computation (quadratic within a chunk via the decay-masked
+kernel matrix, linear state carry between chunks) — the structure that maps
+onto MXU matmuls instead of a length-T scan.
+
+mLSTM is implemented in the same chunked linear-attention form (matrix
+memory with exponential forget/input gates); sLSTM is genuinely recurrent
+(scalar memory with recurrent gate connections) and runs as a lax.scan over
+time, which is faithful to its definition.
+
+Decode paths are single-step recurrences against a small carried state —
+O(1) per token, the reason these families run the long_500k shape.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import truncated_normal
+
+CONV_K = 4  # mamba depthwise conv width
+
+
+# ---------------------------------------------------------------------------
+# Mamba2
+# ---------------------------------------------------------------------------
+def mamba2_init(key, cfg, dtype):
+    d = cfg.d_model
+    d_in = cfg.ssm_expand * d
+    P = 64                       # SSD head dim
+    H = d_in // P
+    N = cfg.ssm_state
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": truncated_normal(ks[0], (d, 2 * d_in + 2 * N + H),
+                                    dtype, d ** -0.5),
+        "conv_w": truncated_normal(ks[1], (CONV_K, d_in), dtype, 0.5),
+        "A_log": jnp.zeros((H,), jnp.float32) + jnp.log(
+            jnp.arange(1, H + 1, dtype=jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm_scale": jnp.ones((d_in,), dtype),
+        "out_proj": truncated_normal(ks[2], (d_in, d), dtype, d_in ** -0.5),
+    }
+
+
+def _split_proj(z, d_in, N, H):
+    xz, gate = z[..., :d_in], z[..., d_in:2 * d_in]
+    Bc = z[..., 2 * d_in:2 * d_in + N]
+    Cc = z[..., 2 * d_in + N:2 * d_in + 2 * N]
+    dt = z[..., 2 * d_in + 2 * N:]
+    return xz, gate, Bc, Cc, dt
+
+
+def _causal_conv(x, w, state=None):
+    """Depthwise causal conv; x (B,T,d_in), w (K,d_in).
+    state (B,K-1,d_in) holds the trailing context for decode."""
+    if state is None:
+        pad = jnp.zeros((x.shape[0], CONV_K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(CONV_K))
+    new_state = xp[:, -(CONV_K - 1):]
+    return out, new_state
+
+
+def mamba2_apply(p, x, cfg, *, chunk=None):
+    """Chunked SSD forward; x (B,T,d) -> (B,T,d).  T % chunk == 0."""
+    B, T, d = x.shape
+    d_in = cfg.ssm_expand * d
+    N, P = cfg.ssm_state, 64
+    H = d_in // P
+    L = min(chunk or cfg.ssm_chunk, T)
+    assert T % L == 0, (T, L)
+    nC = T // L
+
+    z = jnp.einsum("btd,de->bte", x, p["in_proj"])
+    xz, gate, Bc, Cc, dt = _split_proj(z, d_in, N, H)
+    xz, _ = _causal_conv(xz, p["conv_w"])
+    xz = jax.nn.silu(xz)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,T,H)
+    A = -jnp.exp(p["A_log"])                                     # (H,)
+
+    xh = xz.reshape(B, nC, L, H, P)
+    Bch = Bc.reshape(B, nC, L, N).astype(jnp.float32)
+    Cch = Cc.reshape(B, nC, L, N).astype(jnp.float32)
+    dth = dt.reshape(B, nC, L, H)
+
+    da = dth * A                          # (B,nC,L,H) log-decay increments
+    cs = jnp.cumsum(da, axis=2)           # within-chunk cumulative
+    seg = cs[:, :, :, None, :] - cs[:, :, None, :, :]   # (B,nC,L,L,H)
+    tri = jnp.tril(jnp.ones((L, L), bool))
+    decay = jnp.where(tri[None, None, :, :, None], jnp.exp(seg), 0.0)
+
+    # intra-chunk: y[t] = sum_u C_t.B_u decay[t,u] dt_u x_u
+    cb = jnp.einsum("bctn,bcun->bctu", Cch, Bch)         # (B,nC,L,L)
+    kmat = cb[..., None] * decay                          # (B,nC,L,L,H)
+    xdt = xh.astype(jnp.float32) * dth[..., None]         # (B,nC,L,H,P)
+    y_intra = jnp.einsum("bctuh,bcuhp->bcthp", kmat, xdt)
+
+    # inter-chunk state carry: h (B,H,P,N)
+    chunk_decay = jnp.exp(cs[:, :, -1])                   # (B,nC,H)
+    # state contribution of each chunk: sum_u exp(cs_L - cs_u) dt_u x_u B_u^T
+    w_u = jnp.exp(cs[:, :, -1:, :] - cs)                  # (B,nC,L,H)
+    dstate = jnp.einsum("bcuh,bcuhp,bcun->bchpn", w_u * dth, xh.astype(
+        jnp.float32), Bch)
+
+    def carry(h, inp):
+        cd, ds = inp                                      # (B,H) , (B,H,P,N)
+        h_new = h * cd[..., None, None] + ds
+        return h_new, h                                   # emit PRE-state
+
+    h0 = jnp.zeros((B, H, P, N), jnp.float32)
+    _, h_in = jax.lax.scan(
+        carry, h0, (chunk_decay.transpose(1, 0, 2),
+                    dstate.transpose(1, 0, 2, 3, 4)))
+    h_in = h_in.transpose(1, 0, 2, 3, 4)                  # (B,nC,H,P,N)
+
+    ydec = jnp.exp(cs)                                    # (B,nC,L,H)
+    y_inter = jnp.einsum("bctn,bchpn,bcth->bcthp", Cch, h_in, ydec)
+
+    y = (y_intra + y_inter).reshape(B, T, H, P)
+    y = y + xz.reshape(B, T, H, P).astype(jnp.float32) * p["D"][..., None]
+    y = y.reshape(B, T, d_in)
+    # gated RMSNorm (mamba2 norm-before-out)
+    y = y * jax.nn.silu(gate.astype(jnp.float32))
+    var = jnp.mean(y * y, axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(var + 1e-6) * p["norm_scale"].astype(jnp.float32)
+    return jnp.einsum("bte,ed->btd", y.astype(x.dtype), p["out_proj"])
+
+
+def mamba2_init_cache(cfg, batch, dtype):
+    d_in = cfg.ssm_expand * cfg.d_model
+    P = 64
+    H = d_in // P
+    return {
+        "h": jnp.zeros((batch, H, P, cfg.ssm_state), jnp.float32),
+        "conv": jnp.zeros((batch, CONV_K - 1, d_in), dtype),
+    }
+
+
+def mamba2_decode(p, x, cfg, cache):
+    """Single-token step; x (B,1,d)."""
+    B, _, d = x.shape
+    d_in = cfg.ssm_expand * d
+    N, P = cfg.ssm_state, 64
+    H = d_in // P
+    z = jnp.einsum("btd,de->bte", x, p["in_proj"])
+    xz, gate, Bc, Cc, dt = _split_proj(z, d_in, N, H)
+    xz, conv_state = _causal_conv(xz, p["conv_w"], cache["conv"])
+    xz = jax.nn.silu(xz)[:, 0]                            # (B,d_in)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])[:, 0]
+    A = -jnp.exp(p["A_log"])
+    a = jnp.exp(dt * A)                                   # (B,H)
+    xh = xz.reshape(B, H, P).astype(jnp.float32)
+    Bc1 = Bc[:, 0].astype(jnp.float32)                    # (B,N)
+    Cc1 = Cc[:, 0].astype(jnp.float32)
+    h = cache["h"] * a[..., None, None] + jnp.einsum(
+        "bhp,bn,bh->bhpn", xh, Bc1, dt)
+    y = jnp.einsum("bn,bhpn->bhp", Cc1, h) + xh * p["D"][..., None]
+    y = y.reshape(B, 1, d_in)
+    y = y * jax.nn.silu(gate.astype(jnp.float32))
+    var = jnp.mean(y * y, axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(var + 1e-6) * p["norm_scale"].astype(jnp.float32)
+    out = jnp.einsum("bte,ed->btd", y.astype(x.dtype), p["out_proj"])
+    return out, {"h": h, "conv": conv_state}
+
+
+# ---------------------------------------------------------------------------
+# xLSTM: mLSTM (matrix memory, chunked-parallel) and sLSTM (recurrent scan)
+# ---------------------------------------------------------------------------
+def mlstm_init(key, cfg, dtype):
+    d, H = cfg.d_model, cfg.n_heads
+    hd = d // H
+    ks = jax.random.split(key, 5)
+    s = d ** -0.5
+    return {
+        "wq": truncated_normal(ks[0], (d, H, hd), dtype, s),
+        "wk": truncated_normal(ks[1], (d, H, hd), dtype, s),
+        "wv": truncated_normal(ks[2], (d, H, hd), dtype, s),
+        "wif": truncated_normal(ks[3], (d, 2 * H), jnp.float32, s),
+        "wo": truncated_normal(ks[4], (H, hd, d), dtype, s),
+        "f_bias": jnp.full((H,), 3.0, jnp.float32),
+    }
+
+
+def mlstm_apply(p, x, cfg):
+    """Stabilized matrix-LSTM in quadratic (within-sequence) form.
+
+    D[t,u] = exp(sum_{s<=t} log f_s - sum_{s<=u} log f_s + log i_u); the
+    full-sequence quadratic form is fine at xLSTM scale (T<=4k train); the
+    decode path is the O(1) recurrence.
+    """
+    B, T, d = x.shape
+    H = cfg.n_heads
+    hd = d // H
+    q = jnp.einsum("btd,dhk->bhtk", x, p["wq"]) * hd ** -0.5
+    k = jnp.einsum("btd,dhk->bhtk", x, p["wk"])
+    v = jnp.einsum("btd,dhk->bhtk", x, p["wv"])
+    g = jnp.einsum("btd,dh->bth", x.astype(jnp.float32), p["wif"])
+    i_pre, f_pre = g[..., :H], g[..., H:] + p["f_bias"]
+    logf = jax.nn.log_sigmoid(f_pre).transpose(0, 2, 1)   # (B,H,T)
+    logi = i_pre.transpose(0, 2, 1)                        # (B,H,T)
+    cf = jnp.cumsum(logf, axis=-1)
+    # log D[t,u] = cf[t] - cf[u] + logi[u]  (u <= t)
+    logD = cf[:, :, :, None] - cf[:, :, None, :] + logi[:, :, None, :]
+    tri = jnp.tril(jnp.ones((T, T), bool))
+    logD = jnp.where(tri, logD, -jnp.inf)
+    m = jnp.max(logD, axis=-1, keepdims=True)              # stabilizer
+    m = jnp.maximum(m, -1e30)
+    Dm = jnp.exp(logD - m)
+    s = jnp.einsum("bhtk,bhuk->bhtu", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * Dm
+    norm = jnp.maximum(jnp.abs(jnp.sum(s, axis=-1, keepdims=True)),
+                       jnp.exp(-m))
+    y = jnp.einsum("bhtu,bhuk->bhtk", s / norm, v.astype(jnp.float32))
+    y = y.transpose(0, 2, 1, 3).astype(x.dtype)            # (B,T,H,hd)
+    return jnp.einsum("bthk,hkd->btd", y, p["wo"])
+
+
+def mlstm_init_cache(cfg, batch, dtype):
+    H = cfg.n_heads
+    hd = cfg.d_model // H
+    return {
+        "C": jnp.zeros((batch, H, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, H, hd), jnp.float32),
+        "m": jnp.full((batch, H), -1e30, jnp.float32),
+    }
+
+
+def mlstm_decode(p, x, cfg, cache):
+    B, _, d = x.shape
+    H = cfg.n_heads
+    hd = d // H
+    q = jnp.einsum("btd,dhk->bhk", x[:, :1], p["wq"]) * hd ** -0.5
+    k = jnp.einsum("btd,dhk->bhk", x[:, :1], p["wk"])
+    v = jnp.einsum("btd,dhk->bhk", x[:, :1], p["wv"])
+    g = jnp.einsum("bd,dh->bh", x[:, 0].astype(jnp.float32), p["wif"])
+    i_pre, f_pre = g[..., :H], g[..., H:] + p["f_bias"]
+    logf = jax.nn.log_sigmoid(f_pre)
+    logi = i_pre
+    m_new = jnp.maximum(logf + cache["m"], logi)
+    fs = jnp.exp(logf + cache["m"] - m_new)[..., None]
+    is_ = jnp.exp(logi - m_new)[..., None]
+    kf, vf = k.astype(jnp.float32), v.astype(jnp.float32)
+    C = cache["C"] * fs[..., None] + is_[..., None] * \
+        jnp.einsum("bhk,bhv->bhkv", kf, vf)
+    n = cache["n"] * fs + is_ * kf
+    qf = q.astype(jnp.float32)
+    num = jnp.einsum("bhk,bhkv->bhv", qf, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", qf, n)),
+                      jnp.exp(-m_new))[..., None]
+    y = (num / den).astype(x.dtype)                        # (B,H,hd)
+    out = jnp.einsum("bhk,hkd->bd", y, p["wo"])[:, None]
+    return out, {"C": C, "n": n, "m": m_new}
+
+
+def slstm_init(key, cfg, dtype):
+    d, H = cfg.d_model, cfg.n_heads
+    hd = d // H
+    ks = jax.random.split(key, 3)
+    s = d ** -0.5
+    return {
+        "wx": truncated_normal(ks[0], (d, H, 4 * hd), dtype, s),
+        "wr": truncated_normal(ks[1], (H, hd, 4 * hd), dtype, hd ** -0.5),
+        "bias": jnp.zeros((H, 4 * hd), jnp.float32),
+        "wo": truncated_normal(ks[2], (H, hd, d), dtype, s),
+    }
+
+
+def _slstm_cell(p, gx, state):
+    """One sLSTM step.  gx (B,H,4*hd) precomputed input projection."""
+    c, n, m, h = state
+    rec = jnp.einsum("bhk,hkg->bhg", h, p["wr"]).astype(jnp.float32)
+    g = gx.astype(jnp.float32) + rec + p["bias"]
+    hd = h.shape[-1]
+    zt = jnp.tanh(g[..., :hd])
+    i_pre = g[..., hd:2 * hd]
+    f_pre = g[..., 2 * hd:3 * hd]
+    o = jax.nn.sigmoid(g[..., 3 * hd:])
+    m_new = jnp.maximum(f_pre + m, i_pre)
+    i = jnp.exp(i_pre - m_new)
+    f = jnp.exp(f_pre + m - m_new)
+    c_new = f * c + i * zt
+    n_new = jnp.maximum(f * n + i, 1e-6)
+    h_new = (o * c_new / n_new).astype(h.dtype)
+    return (c_new, n_new, m_new, h_new)
+
+
+def slstm_apply(p, x, cfg):
+    B, T, d = x.shape
+    H = cfg.n_heads
+    hd = d // H
+    gx = jnp.einsum("btd,dhg->bthg", x, p["wx"])           # (B,T,H,4hd)
+    state0 = slstm_init_cache(cfg, B, x.dtype)
+
+    def step(state, gxt):
+        s = _slstm_cell(p, gxt, state)
+        return s, s[3]
+
+    _, hs = jax.lax.scan(step, state0, gx.transpose(1, 0, 2, 3))
+    hs = hs.transpose(1, 0, 2, 3)                          # (B,T,H,hd)
+    return jnp.einsum("bthk,hkd->btd", hs, p["wo"])
+
+
+def slstm_init_cache(cfg, batch, dtype):
+    H = cfg.n_heads
+    hd = cfg.d_model // H
+    z = lambda: jnp.zeros((batch, H, hd), jnp.float32)
+    return (z(), z(), jnp.full((batch, H, hd), -30.0, jnp.float32),
+            jnp.zeros((batch, H, hd), dtype))
+
+
+def slstm_decode(p, x, cfg, cache):
+    gx = jnp.einsum("btd,dhg->bhg", x[:, :1], p["wx"])
+    state = _slstm_cell(p, gx, cache)
+    out = jnp.einsum("bhk,hkd->bd", state[3], p["wo"])[:, None]
+    return out, state

@@ -1,0 +1,248 @@
+"""Decoder-only LM assembly: init / forward / prefill / decode.
+
+Depth is organised as `pattern_repeats` copies of `cfg.block_pattern`
+(the "group"); parameters for all groups are stacked on a leading axis and
+the forward pass lax.scans over them — HLO size stays O(pattern), which
+keeps 512-device dry-run compiles tractable for 80-layer models.
+
+zamba2's SHARED_ATTN block applies one un-stacked parameter set inside
+every group — Zamba2's weight-shared global block, expressed as a scan
+closure constant.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import base as B
+from repro.models import attention as A
+from repro.models import moe as M
+from repro.models import ssm as S
+from repro.models.layers import (
+    embed, embed_init, mlp, mlp_init, rmsnorm, rmsnorm_init, unembed,
+)
+from repro.parallel.sharding import hint
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def _block_init(kind, key, cfg, dtype):
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    if kind in (B.ATTN, B.ATTN_LOCAL):
+        return {"ln1": rmsnorm_init(d, dtype),
+                "attn": A.attn_init(ks[0], cfg, dtype),
+                "ln2": rmsnorm_init(d, dtype),
+                "mlp": mlp_init(ks[1], d, cfg.d_ff, dtype)}
+    if kind == B.MOE:
+        return {"ln1": rmsnorm_init(d, dtype),
+                "attn": A.attn_init(ks[0], cfg, dtype),
+                "ln2": rmsnorm_init(d, dtype),
+                "moe": M.moe_init(ks[1], cfg, dtype)}
+    if kind == B.MAMBA2:
+        return {"ln1": rmsnorm_init(d, dtype),
+                "mixer": S.mamba2_init(ks[0], cfg, dtype)}
+    if kind == B.MLSTM:
+        return {"ln1": rmsnorm_init(d, dtype),
+                "mixer": S.mlstm_init(ks[0], cfg, dtype)}
+    if kind == B.SLSTM:
+        return {"ln1": rmsnorm_init(d, dtype),
+                "mixer": S.slstm_init(ks[0], cfg, dtype)}
+    if kind == B.SHARED_ATTN:
+        return {}  # weights live in params["shared"]
+    raise ValueError(kind)
+
+
+def init_lm(cfg: B.ArchConfig, key, dtype=jnp.float32):
+    keys = jax.random.split(key, cfg.pattern_repeats + 3)
+    params = {
+        "embed": embed_init(keys[-1], cfg.vocab_size, cfg.d_model, dtype),
+        "final_norm": rmsnorm_init(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = embed_init(keys[-2], cfg.vocab_size, cfg.d_model,
+                                    dtype)
+    if B.SHARED_ATTN in cfg.block_pattern:
+        params["shared"] = _block_init(B.ATTN, keys[-3], cfg, dtype)
+
+    def group_init(gkey):
+        bks = jax.random.split(gkey, len(cfg.block_pattern))
+        return {f"b{i}": _block_init(kind, bks[i], cfg, dtype)
+                for i, kind in enumerate(cfg.block_pattern)}
+
+    groups = [group_init(keys[g]) for g in range(cfg.pattern_repeats)]
+    params["groups"] = jax.tree.map(lambda *xs: jnp.stack(xs), *groups)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+def _apply_block(kind, bp, x, cfg, shared, aux):
+    if kind == B.SHARED_ATTN:
+        bp, kind = shared, B.ATTN
+    if kind in (B.ATTN, B.ATTN_LOCAL):
+        window = cfg.window if kind == B.ATTN_LOCAL else None
+        h, _ = A.attention_prefill(
+            bp["attn"], rmsnorm(bp["ln1"], x, cfg.norm_eps), cfg,
+            window=window)
+        x = x + h
+        x = x + mlp(bp["mlp"], rmsnorm(bp["ln2"], x, cfg.norm_eps),
+                    cfg.mlp_kind)
+    elif kind == B.MOE:
+        h, _ = A.attention_prefill(
+            bp["attn"], rmsnorm(bp["ln1"], x, cfg.norm_eps), cfg)
+        x = x + h
+        y, moe_aux = M.moe_apply(bp["moe"],
+                                 rmsnorm(bp["ln2"], x, cfg.norm_eps), cfg)
+        x = x + y
+        aux["moe_aux_loss"] += moe_aux["aux_loss"]
+        aux["moe_dropped"] += moe_aux["dropped"]
+    elif kind == B.MAMBA2:
+        x = x + S.mamba2_apply(bp["mixer"],
+                               rmsnorm(bp["ln1"], x, cfg.norm_eps), cfg)
+    elif kind == B.MLSTM:
+        x = x + S.mlstm_apply(bp["mixer"],
+                              rmsnorm(bp["ln1"], x, cfg.norm_eps), cfg)
+    elif kind == B.SLSTM:
+        x = x + S.slstm_apply(bp["mixer"],
+                              rmsnorm(bp["ln1"], x, cfg.norm_eps), cfg)
+    else:
+        raise ValueError(kind)
+    seq = "model" if cfg.sp_residual else None
+    return hint(x, "dp", seq, None), aux
+
+
+def forward(params, cfg: B.ArchConfig, tokens, *,
+            prefix_embeds: Optional[jnp.ndarray] = None):
+    """tokens (B,T) [+ prefix_embeds (B,P,d) for VLM] -> logits, aux."""
+    x = embed(params["embed"], tokens) * cfg.d_model ** 0.5
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    x = hint(x, "dp", None, None)
+    shared = params.get("shared")
+
+    aux0 = {"moe_aux_loss": jnp.float32(0.0), "moe_dropped": jnp.int32(0)}
+
+    # remat each group (backward recomputes the group forward — saves only
+    # the scan carry) + Megatron-style sequence parallelism on the carry
+    # (saved activations shard seq over 'model'), which is what bounds
+    # activation memory for the deep configs.
+    @functools.partial(jax.checkpoint,
+                       policy=jax.checkpoint_policies.nothing_saveable)
+    def group_fn(carry, gparams):
+        x, aux = carry
+        for i, kind in enumerate(cfg.block_pattern):
+            x, aux = _apply_block(kind, gparams[f"b{i}"], x, cfg, shared,
+                                  aux)
+        return (hint(x, "dp", "model", None), aux), None
+
+    carry0 = (hint(x, "dp", "model", None), aux0)
+    if cfg.unroll_groups:
+        carry = carry0
+        for g in range(cfg.pattern_repeats):
+            gp = jax.tree.map(lambda a, g=g: a[g], params["groups"])
+            carry, _ = group_fn(carry, gp)
+        x, aux = carry
+    else:
+        (x, aux), _ = jax.lax.scan(group_fn, carry0, params["groups"])
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed(params["embed"], x, cfg.tie_embeddings,
+                     params.get("head"))
+    return hint(logits, "dp", None, "model"), aux
+
+
+# ---------------------------------------------------------------------------
+# decode (one token against caches)
+# ---------------------------------------------------------------------------
+def _block_cache(kind, cfg, batch, seq_len, dtype):
+    if kind in (B.ATTN, B.ATTN_LOCAL, B.SHARED_ATTN, B.MOE):
+        return A.init_cache(cfg, batch, seq_len, dtype)
+    if kind == B.MAMBA2:
+        return S.mamba2_init_cache(cfg, batch, dtype)
+    if kind == B.MLSTM:
+        return S.mlstm_init_cache(cfg, batch, dtype)
+    if kind == B.SLSTM:
+        return S.slstm_init_cache(cfg, batch, dtype)
+    raise ValueError(kind)
+
+
+def init_caches(cfg: B.ArchConfig, batch: int, seq_len: int,
+                dtype=jnp.float32):
+    """Stacked per-group caches (leading axis = pattern_repeats)."""
+    def one_group():
+        return {f"b{i}": _block_cache(kind, cfg, batch, seq_len, dtype)
+                for i, kind in enumerate(cfg.block_pattern)}
+
+    groups = [one_group() for _ in range(cfg.pattern_repeats)]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *groups)
+
+
+def _apply_block_decode(kind, bp, x, cfg, shared, cache):
+    if kind == B.SHARED_ATTN:
+        bp, kind = shared, B.ATTN
+    if kind in (B.ATTN, B.ATTN_LOCAL, B.MOE):
+        window = cfg.window if kind == B.ATTN_LOCAL else None
+        h, cache = A.attention_decode(
+            bp["attn"], rmsnorm(bp["ln1"], x, cfg.norm_eps), cfg,
+            cache, window=window)
+        x = x + h
+        if kind == B.MOE:
+            y, _ = M.moe_apply(bp["moe"],
+                               rmsnorm(bp["ln2"], x, cfg.norm_eps), cfg)
+            x = x + y
+        else:
+            x = x + mlp(bp["mlp"], rmsnorm(bp["ln2"], x, cfg.norm_eps),
+                        cfg.mlp_kind)
+    elif kind == B.MAMBA2:
+        h, cache = S.mamba2_decode(bp["mixer"],
+                                   rmsnorm(bp["ln1"], x, cfg.norm_eps),
+                                   cfg, cache)
+        x = x + h
+    elif kind == B.MLSTM:
+        h, cache = S.mlstm_decode(bp["mixer"],
+                                  rmsnorm(bp["ln1"], x, cfg.norm_eps),
+                                  cfg, cache)
+        x = x + h
+    elif kind == B.SLSTM:
+        h, cache = S.slstm_decode(bp["mixer"],
+                                  rmsnorm(bp["ln1"], x, cfg.norm_eps),
+                                  cfg, cache)
+        x = x + h
+    else:
+        raise ValueError(kind)
+    return x, cache
+
+
+def decode_step(params, cfg: B.ArchConfig, token, caches):
+    """token (B,1) + stacked caches -> (logits (B,1,V), new caches)."""
+    x = embed(params["embed"], token) * cfg.d_model ** 0.5
+    shared = params.get("shared")
+
+    def group_fn(x, inp):
+        gparams, gcache = inp
+        new_cache = {}
+        for i, kind in enumerate(cfg.block_pattern):
+            x, new_cache[f"b{i}"] = _apply_block_decode(
+                kind, gparams[f"b{i}"], x, cfg, shared, gcache[f"b{i}"])
+        return x, new_cache
+
+    if cfg.unroll_groups:
+        ncs = []
+        for g in range(cfg.pattern_repeats):
+            sel = lambda a, g=g: a[g]
+            x, nc = group_fn(x, (jax.tree.map(sel, params["groups"]),
+                                 jax.tree.map(sel, caches)))
+            ncs.append(nc)
+        new_caches = jax.tree.map(lambda *xs: jnp.stack(xs), *ncs)
+    else:
+        x, new_caches = jax.lax.scan(group_fn, x,
+                                     (params["groups"], caches))
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed(params["embed"], x, cfg.tie_embeddings,
+                     params.get("head"))
+    return logits, new_caches

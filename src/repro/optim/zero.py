@@ -1,0 +1,46 @@
+"""ZeRO-1: shard AdamW moments over the data-parallel axes.
+
+Given the parameter PartitionSpecs (TP over "model"), each moment tensor
+additionally shards its largest un-sharded, divisible dimension over
+("pod","data") — first-moment+second-moment memory drops by ~DP degree,
+which is what lets the 110B config fit 16 GB/chip HBM at 256 chips.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.parallel.sharding import dp_axes, param_specs
+
+
+def _zero1_spec(spec: P, shape, dp: tuple, dp_size: int) -> P:
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    # pick the largest dim that is unsharded and divisible by dp_size
+    best, best_size = None, 0
+    for i, (s, n) in enumerate(zip(entries, shape)):
+        if s is None and n % dp_size == 0 and n > best_size:
+            best, best_size = i, n
+    if best is not None:
+        entries[best] = dp if len(dp) > 1 else dp[0]
+    return P(*entries)
+
+
+def zero1_param_specs(params, mesh: Mesh):
+    """Specs for optimizer-moment tensors (params' TP spec + DP sharding)."""
+    tp = mesh.shape.get("model", 1)
+    dp = dp_axes(mesh)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+    base = param_specs(params, tp)
+
+    def walk(p, s):
+        return _zero1_spec(s, p.shape, dp, dp_size) if dp else s
+
+    return jax.tree.map(walk, params, base,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def zero1_shardings(params, mesh: Mesh):
+    specs = zero1_param_specs(params, mesh)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))

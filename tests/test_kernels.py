@@ -1,0 +1,145 @@
+"""Per-kernel validation: Pallas (interpret=True) vs pure-jnp oracle,
+swept over shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.types import TIME_MAX
+from repro.kernels.event_select.kernel import event_select
+from repro.kernels.event_select.ref import event_select_ref
+from repro.kernels.flash_attention.kernel import flash_attention_padded
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.qchannel.kernel import qchannel_2d
+from repro.kernels.qchannel.ops import transmit_measure
+from repro.kernels.qchannel.ref import qchannel_ref
+
+
+# ---------------------------------------------------------------------------
+# qchannel
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("rows", [8, 64, 520])
+def test_qchannel_kernel_matches_ref(rows):
+    key = jax.random.key(0)
+    uid = jax.random.bits(key, (rows, 128), dtype=jnp.uint32)
+    loss = jax.random.uniform(jax.random.key(1), (rows, 128),
+                              jnp.float32, 0.0, 0.5)
+    bit = jax.random.bernoulli(jax.random.key(2),
+                               shape=(rows, 128)).astype(jnp.int32)
+    basis = jax.random.bernoulli(jax.random.key(3),
+                                 shape=(rows, 128)).astype(jnp.int32)
+    got = qchannel_2d(uid, loss, bit, basis, interpret=True)
+    want = qchannel_ref(uid.reshape(-1), loss.reshape(-1),
+                        bit.reshape(-1), basis.reshape(-1))
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g).reshape(-1),
+                                      np.asarray(w))
+
+
+@pytest.mark.parametrize("n", [1, 100, 128, 1000, 4096])
+def test_qchannel_ops_flat_padding(n):
+    uid = jnp.arange(n, dtype=jnp.uint32) * 7
+    loss = jnp.full((n,), 0.25, jnp.float32)
+    bit = (uid % 2).astype(jnp.int32)
+    basis = ((uid >> 1) % 2).astype(jnp.int32)
+    got = transmit_measure(uid, loss, bit, basis, use_kernel=True,
+                           interpret=True)
+    want = transmit_measure(uid, loss, bit, basis, use_kernel=False)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+def test_qchannel_physics():
+    n = 1 << 14
+    uid = jnp.arange(n, dtype=jnp.uint32)
+    loss = jnp.full((n,), 0.3, jnp.float32)
+    bit = jnp.zeros((n,), jnp.int32)
+    basis = jnp.zeros((n,), jnp.int32)
+    det, rx, out = transmit_measure(uid, loss, bit, basis, use_kernel=False)
+    assert abs(float(det.mean()) - 0.7) < 0.02
+    match = rx == basis
+    # matched basis -> exact bit; mismatched -> ~50/50
+    np.testing.assert_array_equal(np.asarray(out[match]), 0)
+    assert abs(float(out[~match].mean()) - 0.5) < 0.05
+
+
+# ---------------------------------------------------------------------------
+# event_select
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("cap", [128, 512, 2048])
+@pytest.mark.parametrize("seed", [0, 1])
+def test_event_select_matches_ref(cap, seed):
+    k = jax.random.key(seed)
+    time = jax.random.randint(k, (cap,), 0, 1000, jnp.int32)
+    valid = jax.random.bernoulli(jax.random.key(seed + 10), 0.7, (cap,))
+    end = jnp.int32(500)
+    got_o, got_c = event_select(time, valid, end, interpret=True)
+    want_o, want_c = event_select_ref(time, valid, end)
+    assert int(got_c) == int(want_c)
+    np.testing.assert_array_equal(np.asarray(got_o), np.asarray(want_o))
+
+
+def test_event_select_empty_and_full():
+    cap = 256
+    time = jnp.arange(cap, dtype=jnp.int32)
+    none_valid = jnp.zeros((cap,), bool)
+    o, c = event_select(time, none_valid, jnp.int32(1000), interpret=True)
+    assert int(c) == 0
+    all_valid = jnp.ones((cap,), bool)
+    o, c = event_select(time, all_valid, jnp.int32(TIME_MAX),
+                        interpret=True)
+    assert int(c) == cap
+    np.testing.assert_array_equal(np.asarray(o), np.arange(cap))
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("T,S,H,Hkv,D", [
+    (128, 128, 4, 4, 128),     # MHA square
+    (256, 256, 8, 2, 128),     # GQA
+    (128, 384, 4, 1, 128),     # MQA, cross lengths
+])
+def test_flash_attention_matches_ref(T, S, H, Hkv, D, dtype):
+    B = 2
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(ks[0], (B, H, T, D), dtype)
+    k = jax.random.normal(ks[1], (B, Hkv, S, D), dtype)
+    v = jax.random.normal(ks[2], (B, Hkv, S, D), dtype)
+    got = flash_attention_padded(q, k, v, sm_scale=D ** -0.5, causal=True,
+                                 window=None, q_len=T, kv_len=S,
+                                 interpret=True)
+    want = attention_ref(q, k, v, sm_scale=D ** -0.5, causal=True)
+    atol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got, jnp.float32),
+                               np.asarray(want, jnp.float32), atol=atol)
+
+
+@pytest.mark.parametrize("window", [64, 128])
+def test_flash_attention_sliding_window(window):
+    B, H, T, D = 1, 2, 256, 128
+    ks = jax.random.split(jax.random.key(1), 3)
+    q = jax.random.normal(ks[0], (B, H, T, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, H, T, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, H, T, D), jnp.float32)
+    got = flash_attention_padded(q, k, v, sm_scale=D ** -0.5, causal=True,
+                                 window=window, q_len=T, kv_len=T,
+                                 interpret=True)
+    want = attention_ref(q, k, v, sm_scale=D ** -0.5, causal=True,
+                         window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+def test_flash_attention_ragged_padding():
+    """ops wrapper: non-multiple seq lengths via padding + masking."""
+    B, H, T, S, D = 1, 2, 100, 203, 128
+    ks = jax.random.split(jax.random.key(2), 3)
+    q = jax.random.normal(ks[0], (B, H, T, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, H, S, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, H, S, D), jnp.float32)
+    got = flash_attention(q, k, v, causal=False, use_kernel=True,
+                          interpret=True)
+    want = attention_ref(q, k, v, sm_scale=D ** -0.5, causal=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)

@@ -1,0 +1,150 @@
+"""End-to-end behaviour tests for the PDES engine (the paper's system).
+
+The headline property: simulation results are BIT-IDENTICAL for any shard
+count, any partitioning scheme, and either QSM design — the serial-
+equivalence guarantee of a conservative PDES.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (
+    EngineConfig, Simulator, as_network, cut_channels, linear_network,
+    make_partition,
+)
+
+
+def small_cfg(S, **kw):
+    base = dict(n_shards=S, pool_cap=2048, qsm_cap=1024, outbox_cap=1024,
+                route_cap=256)
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+def run(net, S, scheme="contiguous", qsm_mode="gathered", **runkw):
+    part = make_partition(net, S, scheme=scheme)
+    sim = Simulator(net, part, small_cfg(S, qsm_mode=qsm_mode))
+    return sim.run(max_epochs=10_000, chunk=32, **runkw)
+
+
+@pytest.fixture(scope="module")
+def linear_net():
+    return linear_network(n_routers=8, n_photons=24, period_ns=1_000,
+                          hop_delay_ns=25_000, loss_p=0.1)
+
+
+@pytest.fixture(scope="module")
+def as_net():
+    return as_network(n_routers=32, n_as=4, n_photons=24, seed=3)
+
+
+# ---------------------------------------------------------------------------
+# serial equivalence
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("S", [2, 4])
+@pytest.mark.parametrize("qsm_mode", ["gathered", "hashed"])
+def test_shard_count_invariance_linear(linear_net, S, qsm_mode):
+    ref = run(linear_net, 1)
+    got = run(linear_net, S, qsm_mode=qsm_mode)
+    assert ref.fingerprint() == got.fingerprint()
+    assert got.overflow == 0 and got.stale_reads == 0
+
+
+@pytest.mark.parametrize("scheme", ["contiguous", "random", "sa"])
+def test_partition_invariance_as(as_net, scheme):
+    ref = run(as_net, 1)
+    got = run(as_net, 4, scheme=scheme)
+    assert ref.fingerprint() == got.fingerprint()
+
+
+# ---------------------------------------------------------------------------
+# BB84 physics
+# ---------------------------------------------------------------------------
+def test_noiseless_qber_is_zero(linear_net):
+    r = run(linear_net, 2)
+    assert r.errors.sum() == 0
+    assert r.qber == 0.0
+
+
+def test_all_photons_emitted(linear_net):
+    r = run(linear_net, 2)
+    want = sum(s.n_photons for s in linear_net.sessions)
+    assert int(r.emitted.sum()) == want
+
+
+def test_loss_statistics():
+    net = linear_network(n_routers=4, n_photons=400, loss_p=0.3)
+    r = run(net, 2)
+    rate = r.detected.sum() / r.emitted.sum()
+    assert abs(rate - 0.7) < 0.05
+
+
+def test_sift_rate_near_half():
+    net = linear_network(n_routers=4, n_photons=400, loss_p=0.0)
+    r = run(net, 2)
+    rate = r.sifted.sum() / r.detected.sum()
+    assert abs(rate - 0.5) < 0.06
+
+
+def test_keys_nonempty_every_session(linear_net):
+    r = run(linear_net, 4)
+    assert (r.sifted > 0).all()
+
+
+# ---------------------------------------------------------------------------
+# work stealing (paper §IV proposal)
+# ---------------------------------------------------------------------------
+def test_work_stealing_is_exact_and_helps(as_net):
+    base = run(as_net, 4, scheme="sa")
+    steal = run(as_net, 4, scheme="sa", steal_every=1, steal_threshold=1.05)
+    assert base.fingerprint() == steal.fingerprint()
+    ev_b = np.asarray(base.metrics.events_by_kind).sum(-1).sum(1)
+    ev_s = np.asarray(steal.metrics.events_by_kind).sum(-1).sum(1)
+    if steal.steals:  # if any moves happened, imbalance must not worsen
+        assert ev_s.max() <= ev_b.max()
+
+
+def test_burst_emission_exact_and_fewer_waves(as_net):
+    """§Perf iteration 3 (PDES): burst emission is bit-identical and
+    collapses the EMIT-chain wave depth."""
+    part = make_partition(as_net, 4, scheme="sa")
+    base = small_cfg(4)
+    r0 = Simulator(as_net, part, base).run(max_epochs=10_000, chunk=32)
+    r1 = Simulator(as_net, part,
+                   small_cfg(4, burst_emit=True)).run(max_epochs=10_000,
+                                                      chunk=32)
+    assert r0.fingerprint() == r1.fingerprint()
+    w0 = int(np.asarray(r0.metrics.n_waves).sum())
+    w1 = int(np.asarray(r1.metrics.n_waves).sum())
+    assert w1 < w0
+
+
+# ---------------------------------------------------------------------------
+# partitioner
+# ---------------------------------------------------------------------------
+def test_sa_beats_random_cut(as_net):
+    sa = cut_channels(as_net, make_partition(as_net, 8, "sa"))
+    rnd = cut_channels(as_net, make_partition(as_net, 8, "random"))
+    assert sa <= rnd
+
+
+def test_linear_contiguous_cut_is_minimal(linear_net):
+    part = make_partition(linear_net, 4, "contiguous")
+    assert cut_channels(linear_net, part) == 3  # S-1 cut edges
+
+
+# ---------------------------------------------------------------------------
+# instrumentation sanity
+# ---------------------------------------------------------------------------
+def test_metrics_account_for_all_events(linear_net):
+    r = run(linear_net, 2)
+    total_emit = int(np.asarray(r.metrics.events_by_kind)[..., 0].sum())
+    assert total_emit == int(r.emitted.sum())
+
+
+def test_epoch_end_monotonic(linear_net):
+    r = run(linear_net, 2)
+    ee = np.asarray(r.metrics.epoch_end)  # (S, E)
+    live = ee < np.iinfo(np.int32).max // 2
+    for srow, lrow in zip(ee, live):
+        seq = srow[lrow]
+        assert (np.diff(seq) >= 0).all()

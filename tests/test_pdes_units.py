@@ -1,0 +1,150 @@
+"""Unit + property tests for PDES primitives (buffers, routing, pools, rng).
+
+Shapes are FIXED inside each test so jax's jit cache is hit across
+hypothesis examples (content varies, compilation does not).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import events as ev
+from repro.core import rng
+from repro.core.buffering import append, route_records
+from repro.core.types import Staged, TIME_MAX
+
+SET = dict(max_examples=25, deadline=None)
+
+N = 64  # record count used across tests (fixed -> one compile)
+S = 4   # shards
+
+
+# ---------------------------------------------------------------------------
+# append
+# ---------------------------------------------------------------------------
+@settings(**SET)
+@given(st.lists(st.booleans(), min_size=N, max_size=N),
+       st.integers(min_value=0, max_value=20))
+def test_append_counts_and_contents(mask, count0):
+    cap = 48
+    buf = dict(x=jnp.zeros((cap,), jnp.int32))
+    vals = jnp.arange(N, dtype=jnp.int32) + 100
+    new = dict(x=vals)
+    valid = jnp.asarray(mask)
+    buf["x"] = buf["x"].at[:count0].set(-1)
+    out, count, dropped = jax.jit(append, static_argnums=4)(
+        buf, jnp.int32(count0), new, valid, cap)
+    n_live = int(np.sum(mask))
+    want_added = min(n_live, cap - count0)
+    assert int(count) == count0 + want_added
+    assert int(dropped) == n_live - want_added
+    got = set(np.asarray(out["x"][count0:int(count)]).tolist())
+    want = set((np.asarray(vals)[np.asarray(mask)])[:want_added].tolist())
+    assert got == want
+
+
+# ---------------------------------------------------------------------------
+# route_records (vmap harness)
+# ---------------------------------------------------------------------------
+def _route(fields, dest, valid, per_dest_cap):
+    f = jax.vmap(
+        lambda fl, d, v: route_records(fl, d, v, S, per_dest_cap, "i"),
+        axis_name="i")
+    return f(fields, dest, valid)
+
+
+@settings(**SET)
+@given(st.lists(st.integers(min_value=0, max_value=S - 1),
+                min_size=S * N, max_size=S * N),
+       st.lists(st.booleans(), min_size=S * N, max_size=S * N))
+def test_route_records_delivers_exactly_once(dests, valids):
+    dest = jnp.asarray(dests, jnp.int32).reshape(S, N)
+    valid = jnp.asarray(valids).reshape(S, N)
+    payload = (jnp.arange(S * N, dtype=jnp.int32)).reshape(S, N)
+    fields = dict(p=payload)
+    recv, rvalid, n_sent, n_dropped = _route(fields, dest, valid, N)
+    # capacity N per dest is ample (max N live per source shard)
+    assert int(n_dropped.sum()) == 0
+    sent = set(np.asarray(payload)[np.asarray(valid)].tolist())
+    got = set(np.asarray(recv["p"])[np.asarray(rvalid)].tolist())
+    assert sent == got
+    # every record landed on the shard it addressed
+    dest_np, val_np = np.asarray(dest), np.asarray(valid)
+    recv_np, rv_np = np.asarray(recv["p"]), np.asarray(rvalid)
+    for sh in range(S):
+        want = set(np.asarray(payload)[(dest_np == sh) & val_np].tolist())
+        assert set(recv_np[sh][rv_np[sh]].tolist()) == want
+
+
+def test_route_records_overflow_counted():
+    dest = jnp.zeros((S, N), jnp.int32)  # everyone targets shard 0
+    valid = jnp.ones((S, N), bool)
+    fields = dict(p=jnp.arange(S * N, dtype=jnp.int32).reshape(S, N))
+    cap = 8
+    recv, rvalid, n_sent, n_dropped = _route(fields, dest, valid, cap)
+    assert int(n_sent.sum()) == S * cap
+    assert int(n_dropped.sum()) == S * (N - cap)
+
+
+# ---------------------------------------------------------------------------
+# event pool
+# ---------------------------------------------------------------------------
+@settings(**SET)
+@given(st.lists(st.booleans(), min_size=N, max_size=N))
+def test_pool_insert_then_drain(mask):
+    cap = 128
+    pool = ev.empty_pool(cap)
+    staged = Staged(
+        time=jnp.arange(N, dtype=jnp.int32),
+        kind=jnp.zeros((N,), jnp.int32),
+        dst=jnp.zeros((N,), jnp.int32),
+        a0=jnp.arange(N, dtype=jnp.int32),
+        a1=jnp.zeros((N,), jnp.int32),
+        a2=jnp.zeros((N,), jnp.int32),
+        valid=jnp.asarray(mask),
+    )
+    pool, dropped = jax.jit(ev.insert)(pool, staged)
+    n = int(np.sum(mask))
+    assert int(dropped) == 0
+    assert int(ev.occupancy(pool)) == n
+    if n:
+        first = int(np.min(np.arange(N)[np.asarray(mask)]))
+        assert int(ev.next_time(pool)) == first
+    pool = ev.invalidate(pool, pool.valid)
+    assert int(ev.occupancy(pool)) == 0
+    assert int(ev.next_time(pool)) == int(TIME_MAX)
+
+
+def test_pool_overflow_is_counted():
+    pool = ev.empty_pool(16)
+    staged = Staged(
+        time=jnp.arange(32, dtype=jnp.int32),
+        kind=jnp.zeros((32,), jnp.int32), dst=jnp.zeros((32,), jnp.int32),
+        a0=jnp.zeros((32,), jnp.int32), a1=jnp.zeros((32,), jnp.int32),
+        a2=jnp.zeros((32,), jnp.int32), valid=jnp.ones((32,), bool))
+    pool, dropped = ev.insert(pool, staged)
+    assert int(dropped) == 16
+    assert int(ev.occupancy(pool)) == 16
+
+
+# ---------------------------------------------------------------------------
+# rng
+# ---------------------------------------------------------------------------
+def test_mix32_uniformity_and_determinism():
+    x = jnp.arange(1 << 14, dtype=jnp.uint32)
+    bits = rng.rand_bit(x, rng.SALT_BIT)
+    assert abs(float(bits.mean()) - 0.5) < 0.02
+    u = rng.uniform01(x, rng.SALT_LOSS)
+    assert 0.0 <= float(u.min()) and float(u.max()) < 1.0
+    assert abs(float(u.mean()) - 0.5) < 0.02
+    again = rng.rand_bit(x, rng.SALT_BIT)
+    assert (np.asarray(bits) == np.asarray(again)).all()
+
+
+def test_salts_decorrelated():
+    x = jnp.arange(1 << 14, dtype=jnp.uint32)
+    a = rng.rand_bit(x, rng.SALT_BIT)
+    b = rng.rand_bit(x, rng.SALT_TX_BASIS)
+    agree = float((a == b).mean())
+    assert abs(agree - 0.5) < 0.03
